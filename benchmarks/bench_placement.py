@@ -1,0 +1,37 @@
+"""Paper Fig 17/18 — production traces, 50/100/200 adapters, 4 servers:
+P95 TTFT + per-server balance + adapter storage per policy."""
+from __future__ import annotations
+
+import copy
+
+from repro.cluster import ClusterSimulator
+from repro.traces import make_adapters, production_trace
+
+from .common import emit, timed
+
+POLICIES = ["loraserve", "toppings", "slora-random", "slora-contiguous"]
+
+
+def run(fast: bool = False):
+    rows = []
+    sizes = (50, 100) if fast else (50, 100, 200)
+    for n_adapters in sizes:
+        adapters = make_adapters(n_adapters, seed=1)
+        trace = production_trace(n_adapters, rps=20, duration=150, seed=2)
+        for pol in POLICIES:
+            sim = ClusterSimulator(4, adapters, policy=pol, seed=3,
+                                   timeout=60, warmup=40)
+            res, us = timed(lambda: sim.run(copy.deepcopy(trace)),
+                            repeat=1)
+            rows.append(emit(
+                f"fig17/prod/{n_adapters}ad/{pol}", us,
+                f"p95_ttft={res.p95_ttft():.3f}s;p50={res.p50_ttft():.3f}s;"
+                f"timeout={res.timed_out};"
+                f"max_adapters={res.max_adapters_per_server};"
+                f"adapter_GB={res.total_adapter_bytes / 1e9:.2f}"))
+            if n_adapters == 100:
+                per = ";".join(f"s{i}={v:.2f}"
+                               for i, v in
+                               enumerate(res.per_server_p95_ttft))
+                rows.append(emit(f"fig18/per_server/{pol}", 0.0, per))
+    return rows

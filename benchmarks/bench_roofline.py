@@ -1,0 +1,30 @@
+"""Roofline summary — reads the dry-run artifacts (experiments/dryrun/)
+and reports the three roofline terms per (arch x shape), single-pod."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run(dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    paths = sorted(glob.glob(os.path.join(dryrun_dir,
+                                          "*__single.json")))
+    if not paths:
+        rows.append(emit("roofline/missing", 0.0,
+                         "run repro.launch.dryrun first"))
+        return rows
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        dom = d["bottleneck"]
+        tdom = d[f"t_{dom}"]
+        rows.append(emit(
+            f"roofline/{d['arch']}/{d['shape']}", d["compile_s"] * 1e6,
+            f"tc={d['t_compute']:.3e};tm={d['t_memory']:.3e};"
+            f"tx={d['t_collective']:.3e};bottleneck={dom};"
+            f"useful_frac={d['useful_flops_frac']:.2f}"))
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Fig 14 — adapter fetch latency by source (host mem, IB GDR,
+SSD; plus the TPU ICI deployment mapping)."""
+from __future__ import annotations
+
+from repro.cluster import NetworkModel
+
+from .common import emit
+
+
+def run():
+    net = NetworkModel()
+    rows = []
+    for mb in (64, 256, 1024, 2048):
+        nbytes = mb * 1024 * 1024
+        for src in net.sources():
+            lat = net.transfer_latency(nbytes, src)
+            rows.append(emit(f"fig14/{src}/{mb}MB", lat * 1e6,
+                             f"latency_s={lat:.4f}"))
+    # paper's observation: IB GDR ~ local host->GPU
+    l_ib = net.transfer_latency(2 << 30, "ib_gdr")
+    l_host = net.transfer_latency(2 << 30, "local_host")
+    l_ssd = net.transfer_latency(2 << 30, "ssd")
+    rows.append(emit("fig14/ib_vs_host", 0.0,
+                     f"ratio={l_ib / l_host:.2f}"))
+    rows.append(emit("fig14/ssd_vs_host", 0.0,
+                     f"ratio={l_ssd / l_host:.2f}"))
+    return rows

@@ -1,0 +1,6 @@
+from .costmodel import (ServerModel, co_serving_slowdown, make_server,
+                        profile_operating_points)
+from .network import NetworkModel
+from .server import SimRequest, SimServer
+from .simulator import (ClusterSimulator, SimResult, max_rps_under_slo,
+                        min_servers_under_slo)

@@ -1,0 +1,135 @@
+"""Analytic cost model for a LoRA-serving LLM inference server, calibrated
+to the paper's measurements (§III-A). The cluster simulator uses it for
+iteration times; the orchestrator uses it for operating points.
+
+Calibration (derivation):
+  * Fig 3 — single request, Llama-7B, input 2000: rank-128 prefill is
+    2.7x rank-8. With lora overhead l(r) = x*r*base:
+    (1+128x)/(1+8x) = 2.7  =>  x = 0.016 at TP=1.
+  * Fig 5 — same at TP=8: ratio 1.2  =>  x(8) = 0.00169. Fitting
+    x(tp) = x1 * tp^-beta gives beta = log(0.016/0.00169)/log(8) ~ 1.08
+    (the LoRA BGMV/MBGMV path loses efficiency slower than 1/tp).
+  * Fig 4 — Llama-70B TP=8: ratio 1.45 => x70(8) ~ 0.0039 ~ 2.3x the 7B
+    value; consistent with x scaling linearly in d_model (8192/4096 = 2).
+  =>  lora_factor(r, d, tp) = 0.016 * r * (d/4096) / tp^1.08
+  * Fig 1 — co-serving r8 with r128 inflates the whole batch to max-rank
+    cost: iteration cost uses max(rank in batch), which yields the +84%
+    P95 TTFT skew in simulation.
+  * Fig 3 bottom — decode (TBT) rank sensitivity is "subtle" (memory
+    bound): decode lora factor is scaled by DECODE_LORA_DAMP = 0.15.
+
+Hardware reference: A100 SXM 40GB (312 TF bf16, ~1.55 TB/s HBM), the
+paper's Standard_ND96asr_v4 nodes. The TPU deployment path of this repo
+uses the v5e constants in launch/roofline instead; the simulator keeps the
+paper's GPUs so its figures are comparable with the paper's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+A100_FLOPS = 312e12          # bf16 peak / GPU
+A100_HBM = 1.55e12           # bytes/s
+# Absolute-scale calibration: the paper's stack (S-LoRA on A100, Fig 3/6)
+# achieves far below peak — Fig 6 shows a single TP=4 server *saturating*
+# at ~4 RPS (input 512 / output 128) for rank>=64. Backing that through
+# the iteration model gives an effective prefill MFU ~0.07 and decode HBM
+# efficiency ~0.35 (decode-bound saturation at ~550 tok/s/server).
+MFU_PREFILL = 0.07           # achieved fraction during prefill
+HBM_EFF_DECODE = 0.35        # achieved fraction during decode
+X1 = 0.016                   # lora factor per unit rank at TP=1, d=4096
+TP_BETA = 1.08
+DECODE_LORA_DAMP = 0.15
+ITER_OVERHEAD = 4.0e-3       # scheduling/kernel-launch floor per iteration
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerModel:
+    """One LLM inference server (one base-model instance, TP over tp GPUs)."""
+    n_params: float = 6.7e9          # Llama-7B
+    d_model: int = 4096
+    tp: int = 4
+    max_batch_tokens: int = 8192     # prefill token budget per iteration
+    max_decode_batch: int = 64
+
+    # -- primitives ------------------------------------------------------
+    def lora_factor(self, rank: int) -> float:
+        if rank <= 0:
+            return 0.0
+        return X1 * rank * (self.d_model / 4096.0) / (self.tp ** TP_BETA)
+
+    def prefill_time(self, n_tokens: int, max_rank: int) -> float:
+        """Seconds for one prefill iteration of `n_tokens` total tokens,
+        co-batched with max adapter rank `max_rank` (everyone pays it)."""
+        base = 2.0 * self.n_params * n_tokens / (
+            self.tp * A100_FLOPS * MFU_PREFILL)
+        return ITER_OVERHEAD + base * (1.0 + self.lora_factor(max_rank))
+
+    def adapter_read_bytes(self, rank: int) -> float:
+        """BGMV gather per request per decode iteration: A+B on 4 targets,
+        every layer, bf16 — padded to the batch max rank (Punica BGMV
+        semantics, §III-A.5)."""
+        n_layers = 32 * (self.d_model / 4096.0)
+        return 2 * 2 * 4 * self.d_model * rank * n_layers
+
+    def decode_time(self, batch: int, max_rank: int) -> float:
+        """Seconds for one decode iteration (1 token for every running
+        request). Weight-read bound; KV + per-request max-rank adapter
+        gathers grow with batch."""
+        weight_bytes = 2.0 * self.n_params
+        kv_bytes = batch * 2 * 2 * 32 * 1024 * 512   # rough per-req KV read
+        lora_bytes = batch * self.adapter_read_bytes(max_rank)
+        base = (weight_bytes + kv_bytes + lora_bytes) / (
+            self.tp * A100_HBM * HBM_EFF_DECODE)
+        return ITER_OVERHEAD + base
+
+    # -- aggregates -------------------------------------------------------
+    def prefill_token_rate(self, rank: int) -> float:
+        """Sustained prefill tokens/s when serving only rank-`rank` load."""
+        t = self.prefill_time(self.max_batch_tokens, rank)
+        return self.max_batch_tokens / t
+
+    def decode_token_rate(self, rank: int, batch: int = 32) -> float:
+        return batch / self.decode_time(batch, rank)
+
+    def operating_point(self, rank: int, headroom: float = 0.8,
+                        ref_prompt: int = 512, ref_output: int = 128
+                        ) -> float:
+        """Max total TPS (prompt+output tokens) under SLO for a server
+        dedicated to rank-`rank` load (paper: profiled a priori). Combines
+        the prefill and decode phases for the reference request shape;
+        `headroom` keeps queues stable (P95 under SLO needs rho<1)."""
+        t_req = (ref_prompt / self.prefill_token_rate(rank)
+                 + ref_output / self.decode_token_rate(rank))
+        rate = (ref_prompt + ref_output) / t_req
+        return headroom * rate
+
+
+def profile_operating_points(server: ServerModel,
+                             ranks: Iterable[int],
+                             headroom: float = 0.8):
+    """The paper's a-priori profiling step (§IV-A)."""
+    return {r: server.operating_point(r, headroom) for r in sorted(set(ranks))}
+
+
+def co_serving_slowdown(server: ServerModel, rank_a: int, rank_b: int
+                        ) -> float:
+    """Fig 1 reproduction: relative prefill slowdown of rank_a requests
+    when co-batched with rank_b (vs a pure rank_a batch)."""
+    t_mixed = server.prefill_time(server.max_batch_tokens,
+                                  max(rank_a, rank_b))
+    t_pure = server.prefill_time(server.max_batch_tokens, rank_a)
+    return t_mixed / t_pure
+
+
+MODEL_PRESETS = {
+    "llama-7b": dict(n_params=6.7e9, d_model=4096),
+    "llama-30b": dict(n_params=32.5e9, d_model=6656),
+    "llama-70b": dict(n_params=70e9, d_model=8192),
+}
+
+
+def make_server(model: str = "llama-7b", tp: int = 4, **kw) -> ServerModel:
+    preset = dict(MODEL_PRESETS[model])
+    preset.update(kw)
+    return ServerModel(tp=tp, **preset)

@@ -1,0 +1,36 @@
+"""Adapter-transfer model (paper Fig 14): latency of fetching a tensor
+from local host memory, a remote server over GPUDirect-RDMA/InfiniBand,
+or local SSD. The paper's observation: IB GDR ~ local host->GPU latency;
+SSD is prohibitive.
+
+The TPU deployment mapping (DESIGN.md §3) adds an "ici" source with
+v5e-class inter-host bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# bytes/s bandwidth and seconds of base latency per source
+_SOURCES: Dict[str, tuple] = {
+    # local host memory -> GPU over PCIe4 x16
+    "local_host": (25e9, 50e-6),
+    # remote host: src host->GPU copy then GPUDirect RDMA over 200Gb IB
+    "ib_gdr": (22e9, 180e-6),
+    # local NVMe SSD (the paper found this prohibitive)
+    "ssd": (1.8e9, 120e-6),
+    # TPU host-to-host over ICI (deployment mapping)
+    "ici": (45e9, 60e-6),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    contention: float = 1.0     # >1 slows all transfers (shared links)
+
+    def transfer_latency(self, nbytes: int, source: str) -> float:
+        bw, lat = _SOURCES[source]
+        return lat + self.contention * nbytes / bw
+
+    def sources(self):
+        return sorted(_SOURCES)

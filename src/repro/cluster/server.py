@@ -1,0 +1,137 @@
+"""Iteration-level simulated LLM inference server (continuous batching à
+la Orca/S-LoRA): each iteration is either a prefill batch (token-budget
+bound) or a decode step for all running requests. Co-batched iterations
+pay the cost of the *maximum* adapter rank present — the interference
+mechanism the paper analyzes (§III-A.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .costmodel import ServerModel
+
+
+@dataclasses.dataclass
+class SimRequest:
+    req_id: int
+    adapter_id: str
+    rank: int
+    prompt_len: int
+    output_len: int
+    arrival: float
+    # filled during simulation
+    ready: float = 0.0            # arrival + adapter fetch latency
+    prefill_done: float = -1.0
+    finish: float = -1.0
+    server: int = -1
+    decoded: int = 0
+    fetch_latency: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.prefill_done - self.arrival
+
+    @property
+    def tbt(self) -> float:
+        if self.output_len <= 1 or self.finish < 0:
+            return 0.0
+        return (self.finish - self.prefill_done) / max(1, self.output_len - 1)
+
+
+class SimServer:
+    """State machine advanced by the cluster simulator's event loop."""
+
+    def __init__(self, server_id: int, model: ServerModel):
+        self.sid = server_id
+        self.model = model
+        self.waiting: List[SimRequest] = []
+        self.running: List[SimRequest] = []
+        self.busy_until: float = 0.0
+        self.iterations = 0
+        self.prefill_tokens = 0
+        self.busy_time = 0.0
+
+    # -- load introspection (used by Toppings routing) --------------------
+    def estimated_work(self, now: float) -> float:
+        """Seconds of outstanding work: queued prefills + remaining decode."""
+        w = max(0.0, self.busy_until - now)
+        for r in self.waiting:
+            w += self.model.prefill_time(r.prompt_len, r.rank)
+        if self.running:
+            max_rank = max(r.rank for r in self.running)
+            remaining = max((r.output_len - r.decoded) for r in self.running)
+            w += remaining * self.model.decode_time(len(self.running),
+                                                    max_rank) / \
+                max(1, len(self.running))
+        return w
+
+    def enqueue(self, req: SimRequest) -> None:
+        self.waiting.append(req)
+
+    def has_work(self, now: float) -> bool:
+        return bool(self.running) or any(r.ready <= now for r in self.waiting)
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        if self.busy_until > now:
+            return self.busy_until
+        if self.running:
+            return now
+        ready = [r.ready for r in self.waiting]
+        if not ready:
+            return None
+        t = min(ready)
+        return max(t, now)
+
+    def step(self, now: float) -> float:
+        """Run one iteration starting at `now`; returns its finish time.
+        Prefill-prioritized (matches S-LoRA's scheduler)."""
+        ready = [r for r in self.waiting if r.ready <= now]
+        if ready and len(self.running) < self.model.max_decode_batch:
+            batch: List[SimRequest] = []
+            tokens = 0
+            for r in sorted(ready, key=lambda r: r.ready):
+                if tokens + r.prompt_len > self.model.max_batch_tokens \
+                        and batch:
+                    break
+                if len(self.running) + len(batch) >= \
+                        self.model.max_decode_batch:
+                    break
+                batch.append(r)
+                tokens += r.prompt_len
+            if batch:
+                max_rank = max(r.rank for r in batch)
+                t_iter = self.model.prefill_time(tokens, max_rank)
+                end = now + t_iter
+                for r in batch:
+                    self.waiting.remove(r)
+                    r.prefill_done = end
+                    r.decoded = 1        # first token out of prefill
+                    if r.output_len <= 1:
+                        r.finish = end
+                    else:
+                        self.running.append(r)
+                self.iterations += 1
+                self.prefill_tokens += tokens
+                self.busy_time += t_iter
+                self.busy_until = end
+                return end
+        if self.running:
+            max_rank = max(r.rank for r in self.running)
+            t_iter = self.model.decode_time(len(self.running), max_rank)
+            end = now + t_iter
+            done = []
+            for r in self.running:
+                r.decoded += 1
+                if r.decoded >= r.output_len:
+                    r.finish = end
+                    done.append(r)
+            for r in done:
+                self.running.remove(r)
+            self.iterations += 1
+            self.busy_time += t_iter
+            self.busy_until = end
+            return end
+        # nothing ready: idle until next request becomes ready
+        nxt = self.next_event_time(now)
+        return nxt if nxt is not None else now

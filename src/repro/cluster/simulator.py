@@ -1,0 +1,246 @@
+"""Discrete-event cluster simulator: trace in, per-request TTFT/TBT out.
+
+Wires together the LORASERVE orchestrator (placement policy + routing
+table + distributed adapter pool + demand estimator) with a pool of
+iteration-level SimServers, advancing time with a simple event loop.
+Rebalancing timesteps fire every `rebalance_period` seconds for dynamic
+policies (paper Fig 11 step 6-7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional
+
+from repro.core.baselines import POLICIES
+from repro.core.demand import DemandEstimator
+from repro.core.pool import DistributedAdapterPool
+from repro.core.routing import RoutingTable
+from repro.core.types import AdapterInfo, PlacementContext
+
+from .costmodel import ServerModel, profile_operating_points
+from .network import NetworkModel
+from .server import SimRequest, SimServer
+
+
+@dataclasses.dataclass
+class SimResult:
+    requests: List[SimRequest]
+    fetches: int
+    fetch_bytes: int
+    max_adapters_per_server: int
+    total_adapter_bytes: int
+    server_busy: List[float]
+    rebalances: int
+    timed_out: int
+    per_server_p95_ttft: List[float]
+    warmup: float = 0.0     # requests arriving before this are excluded
+
+    def _eligible(self):
+        return [r for r in self.requests if r.arrival >= self.warmup]
+
+    def _ttfts(self):
+        return sorted(r.ttft for r in self._eligible()
+                      if r.prefill_done >= 0)
+
+    def p95_ttft(self) -> float:
+        t = self._ttfts()
+        return t[int(0.95 * (len(t) - 1))] if t else float("inf")
+
+    def p50_ttft(self) -> float:
+        t = self._ttfts()
+        return t[len(t) // 2] if t else float("inf")
+
+    def mean_tbt(self) -> float:
+        ts = [r.tbt for r in self._eligible()
+              if r.finish >= 0 and r.tbt > 0]
+        return sum(ts) / len(ts) if ts else 0.0
+
+    def p95_tbt(self) -> float:
+        ts = sorted(r.tbt for r in self._eligible()
+                    if r.finish >= 0 and r.tbt > 0)
+        return ts[int(0.95 * (len(ts) - 1))] if ts else 0.0
+
+    def completed(self) -> int:
+        return sum(1 for r in self.requests if r.finish >= 0)
+
+    def meets_slo(self, slo_ttft: float) -> bool:
+        return self.timed_out == 0 and self.p95_ttft() <= slo_ttft
+
+
+class ClusterSimulator:
+    def __init__(self, n_servers: int, adapters: List[AdapterInfo],
+                 policy: str = "loraserve",
+                 server_model: Optional[ServerModel] = None,
+                 rebalance_period: float = 15.0,
+                 timeout: float = 120.0,
+                 warmup: float = 0.0,
+                 seed: int = 0):
+        self.warmup = warmup
+        self.n = n_servers
+        self.adapters = adapters
+        self.meta = {a.adapter_id: a for a in adapters}
+        self.model = server_model or ServerModel()
+        self.policy = POLICIES[policy]() if isinstance(policy, str) \
+            else policy
+        self.network = NetworkModel()
+        self.rebalance_period = rebalance_period
+        self.timeout = timeout
+        self.seed = seed
+        ranks = {a.rank for a in adapters}
+        self.operating_points = profile_operating_points(self.model, ranks)
+
+    def run(self, trace: List[SimRequest]) -> SimResult:
+        servers = [SimServer(i, self.model) for i in range(self.n)]
+        demand = DemandEstimator()
+        # initial placement from uniform demand prior
+        ctx = PlacementContext(
+            n_servers=self.n, adapters=self.adapters,
+            demand_tps={a.adapter_id: 1.0 for a in self.adapters},
+            operating_points=self.operating_points)
+        placement = self.policy.place(ctx)
+        router = RoutingTable(placement, seed=self.seed)
+        pool = DistributedAdapterPool(self.n, self.adapters, self.network)
+        pool.seed(placement)
+        max_adapters = pool.max_adapters_per_server()
+        total_bytes = pool.total_bytes()
+
+        trace = sorted(trace, key=lambda r: r.arrival)
+        window_tokens: Dict[str, float] = {}
+        next_rebalance = self.rebalance_period
+        rebalances = 0
+        timed_out = 0
+
+        # event heap entries: (time, seq, kind, payload)
+        heap: list = []
+        seq = 0
+        for r in trace:
+            heapq.heappush(heap, (r.arrival, seq, "arrival", r))
+            seq += 1
+        if self.policy.dynamic:
+            heapq.heappush(heap, (next_rebalance, seq, "rebalance", None))
+            seq += 1
+
+        def schedule_server(s: SimServer, now: float):
+            nonlocal seq
+            t = s.next_event_time(now)
+            if t is not None:
+                heapq.heappush(heap, (max(t, now), seq, "server", s.sid))
+                seq += 1
+
+        now = 0.0
+        while heap:
+            now, _, kind, payload = heapq.heappop(heap)
+            if kind == "arrival":
+                req: SimRequest = payload
+                if self.policy.replicate_all:
+                    sid = min(range(self.n),
+                              key=lambda i: servers[i].estimated_work(now))
+                    router.request_counts[req.adapter_id] = \
+                        router.request_counts.get(req.adapter_id, 0) + 1
+                else:
+                    sid = router.route(req.adapter_id,
+                                       tokens=req.prompt_len +
+                                       req.output_len)
+                fetch_lat, _ = (0.0, 0) if self.policy.replicate_all else \
+                    pool.ensure_local(sid, req.adapter_id)
+                req.server = sid
+                req.fetch_latency = fetch_lat
+                req.ready = now + fetch_lat
+                req.rank = self.meta[req.adapter_id].rank
+                servers[sid].enqueue(req)
+                window_tokens[req.adapter_id] = \
+                    window_tokens.get(req.adapter_id, 0.0) + \
+                    req.prompt_len + req.output_len
+                schedule_server(servers[sid], now)
+            elif kind == "server":
+                s = servers[payload]
+                if s.busy_until > now + 1e-12:
+                    heapq.heappush(heap, (s.busy_until, seq, "server", s.sid))
+                    seq += 1
+                    continue
+                # drop timed-out waiting requests
+                for r in list(s.waiting):
+                    if now - r.arrival > self.timeout:
+                        s.waiting.remove(r)
+                        timed_out += 1
+                if s.has_work(now):
+                    end = s.step(now)
+                    if end > now or s.waiting or s.running:
+                        heapq.heappush(heap, (end, seq, "server", s.sid))
+                        seq += 1
+                else:
+                    schedule_server(s, now + 1e-9) if s.waiting else None
+            elif kind == "rebalance":
+                rebalances += 1
+                for aid in self.meta:
+                    tps = window_tokens.get(aid, 0.0) / self.rebalance_period
+                    demand.observe(aid, tps)
+                window_tokens = {}
+                ctx = PlacementContext(
+                    n_servers=self.n, adapters=self.adapters,
+                    demand_tps=demand.demands(list(self.meta)),
+                    operating_points=self.operating_points,
+                    prev_placement=placement)
+                placement = self.policy.place(ctx)
+                router.update(placement)
+                pool.apply_placement(placement)
+                max_adapters = max(max_adapters,
+                                   pool.max_adapters_per_server())
+                if heap:   # only keep rebalancing while work remains
+                    heapq.heappush(
+                        heap, (now + self.rebalance_period, seq,
+                               "rebalance", None))
+                    seq += 1
+
+        if self.policy.replicate_all:
+            max_adapters = len(self.adapters)
+            total_bytes = sum(a.nbytes for a in self.adapters) * self.n
+        else:
+            max_adapters = max(max_adapters, pool.max_adapters_per_server())
+            total_bytes = max(total_bytes, pool.total_bytes())
+
+        per_server = []
+        for s in servers:
+            ts = sorted(r.ttft for r in trace
+                        if r.server == s.sid and r.prefill_done >= 0)
+            per_server.append(ts[int(0.95 * (len(ts) - 1))] if ts else 0.0)
+        return SimResult(
+            requests=trace,
+            fetches=pool.fetches,
+            fetch_bytes=pool.fetch_bytes,
+            max_adapters_per_server=max_adapters,
+            total_adapter_bytes=total_bytes,
+            server_busy=[s.busy_time for s in servers],
+            rebalances=rebalances,
+            timed_out=timed_out,
+            per_server_p95_ttft=per_server,
+            warmup=self.warmup,
+        )
+
+
+def max_rps_under_slo(make_trace, n_servers: int, adapters, policy: str,
+                      slo_ttft: float = 10.0, rps_grid=None, **sim_kw):
+    """Paper's 'throughput under SLO' metric: max RPS whose P95 TTFT
+    meets the SLO. `make_trace(rps)` builds the trace."""
+    best = 0.0
+    for rps in (rps_grid or [4, 8, 12, 16, 20, 24, 28, 32, 36, 40]):
+        sim = ClusterSimulator(n_servers, adapters, policy=policy, **sim_kw)
+        res = sim.run(make_trace(rps))
+        if res.meets_slo(slo_ttft):
+            best = rps
+        else:
+            break
+    return best
+
+
+def min_servers_under_slo(make_trace, adapters, policy: str, rps: float,
+                          slo_ttft: float = 10.0, max_servers: int = 16,
+                          **sim_kw):
+    """Paper's GPU-savings metric: smallest cluster meeting the SLO."""
+    for n in range(1, max_servers + 1):
+        sim = ClusterSimulator(n, adapters, policy=policy, **sim_kw)
+        res = sim.run(make_trace(rps))
+        if res.meets_slo(slo_ttft):
+            return n
+    return max_servers + 1

@@ -1,0 +1,18 @@
+"""LORASERVE core: the paper's contribution — rank- and demand-aware
+dynamic adapter placement (Algorithm 1), phi-weighted routing, and the
+distributed adapter pool."""
+from .baselines import (ContiguousPolicy, LoraservePolicy, POLICIES,
+                        RandomPolicy, ToppingsPolicy)
+from .demand import DemandEstimator
+from .orchestrator import ClusterOrchestrator
+from .placement import assign_loraserve
+from .pool import DistributedAdapterPool
+from .routing import RoutingTable
+from .types import (AdapterInfo, Placement, PlacementContext,
+                    PlacementStats, servers_to_adapters)
+
+__all__ = ["assign_loraserve", "AdapterInfo", "Placement",
+           "PlacementContext", "PlacementStats", "DemandEstimator",
+           "RoutingTable", "DistributedAdapterPool", "ClusterOrchestrator",
+           "POLICIES", "LoraservePolicy", "RandomPolicy",
+           "ContiguousPolicy", "ToppingsPolicy", "servers_to_adapters"]

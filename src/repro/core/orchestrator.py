@@ -1,0 +1,62 @@
+"""Cluster orchestrator facade (paper Fig 11): owns the placement policy,
+routing table, distributed adapter pool, and demand estimator. The
+discrete-event simulator drives it; ``launch/serve.py`` drives the same
+object against real JAX engines for the end-to-end example.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from .baselines import POLICIES
+from .demand import DemandEstimator
+from .pool import DistributedAdapterPool
+from .routing import RoutingTable
+from .types import AdapterInfo, Placement, PlacementContext
+
+
+class ClusterOrchestrator:
+    def __init__(self, n_servers: int, adapters: List[AdapterInfo],
+                 operating_points: Dict[int, float],
+                 policy: str = "loraserve", network=None, seed: int = 0):
+        self.n = n_servers
+        self.adapters = adapters
+        self.meta = {a.adapter_id: a for a in adapters}
+        self.operating_points = operating_points
+        self.policy = POLICIES[policy]() if isinstance(policy, str) \
+            else policy
+        self.demand = DemandEstimator()
+        ctx = PlacementContext(
+            n_servers=n_servers, adapters=adapters,
+            demand_tps={a.adapter_id: 1.0 for a in adapters},
+            operating_points=operating_points)
+        self.placement: Placement = self.policy.place(ctx)
+        self.router = RoutingTable(self.placement, seed=seed)
+        self.pool = DistributedAdapterPool(n_servers, adapters, network)
+        self.pool.seed(self.placement)
+        self._window_tokens: Dict[str, float] = {}
+
+    # -- request path (Fig 11 steps 1-4) ----------------------------------
+    def route(self, adapter_id: str, tokens: float = 0.0):
+        """Returns (server_id, fetch_latency_seconds)."""
+        sid = self.router.route(adapter_id, tokens)
+        lat, _ = self.pool.ensure_local(sid, adapter_id)
+        self._window_tokens[adapter_id] = \
+            self._window_tokens.get(adapter_id, 0.0) + tokens
+        return sid, lat
+
+    # -- control path (Fig 11 steps 6-7) -----------------------------------
+    def end_of_timestep(self, period_s: float) -> Placement:
+        for aid in self.meta:
+            self.demand.observe(aid, self._window_tokens.get(aid, 0.0)
+                                / period_s)
+        self._window_tokens = {}
+        if self.policy.dynamic:
+            ctx = PlacementContext(
+                n_servers=self.n, adapters=self.adapters,
+                demand_tps=self.demand.demands(list(self.meta)),
+                operating_points=self.operating_points,
+                prev_placement=self.placement)
+            self.placement = self.policy.place(ctx)
+            self.router.update(self.placement)
+            self.pool.apply_placement(self.placement)
+        return self.placement

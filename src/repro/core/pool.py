@@ -1,0 +1,100 @@
+"""Distributed adapter pool (paper §IV-B, Fig 13).
+
+Each server stores in host memory only the adapters routed to it; the
+orchestrator keeps a cluster-wide location index. On a routing miss the
+adapter is fetched peer-to-peer (GPUDirect-RDMA over InfiniBand in the
+paper; ICI between TPU hosts in our deployment mapping) and cached
+locally; copies no longer referenced by the routing table are deleted
+after the fetch completes — while the invariant "every adapter lives on
+>= 1 server" is preserved at all times.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+from .types import AdapterInfo, Placement
+
+
+class DistributedAdapterPool:
+    def __init__(self, n_servers: int, adapters: List[AdapterInfo],
+                 network=None):
+        self.n_servers = n_servers
+        self.meta: Dict[str, AdapterInfo] = {a.adapter_id: a
+                                             for a in adapters}
+        self.local: List[Set[str]] = [set() for _ in range(n_servers)]
+        self.index: Dict[str, Set[int]] = {a.adapter_id: set()
+                                           for a in adapters}
+        self.network = network
+        self.desired: Dict[str, Set[int]] = {}
+        # telemetry
+        self.fetches = 0
+        self.fetch_bytes = 0
+        self.evictions = 0
+
+    # -- initial seeding -----------------------------------------------
+    def seed(self, placement: Placement) -> None:
+        for aid, entry in placement.items():
+            for sid in entry:
+                self.local[sid].add(aid)
+                self.index[aid].add(sid)
+        self.desired = {aid: set(entry) for aid, entry in placement.items()}
+
+    # -- placement updates (lazy migration, Fig 13) ---------------------
+    def apply_placement(self, placement: Placement) -> None:
+        """Record the new desired placement. Migration is lazy: adapters
+        move on first access; stale copies are GC'd then."""
+        self.desired = {aid: set(entry) for aid, entry in placement.items()}
+
+    # -- data path -------------------------------------------------------
+    def ensure_local(self, server_id: int, adapter_id: str
+                     ) -> Tuple[float, int]:
+        """Make `adapter_id` available on `server_id`. Returns
+        (fetch_latency_seconds, bytes_transferred); (0, 0) on a hit."""
+        if adapter_id in self.local[server_id]:
+            self._gc(adapter_id)
+            return 0.0, 0
+        holders = self.index[adapter_id]
+        if not holders:
+            raise KeyError(f"adapter {adapter_id} lost from cluster")
+        src = min(holders)          # deterministic; any holder works
+        nbytes = self.meta[adapter_id].nbytes
+        latency = (self.network.transfer_latency(nbytes, "ib_gdr")
+                   if self.network else 0.0)
+        self.local[server_id].add(adapter_id)
+        self.index[adapter_id].add(server_id)
+        self.fetches += 1
+        self.fetch_bytes += nbytes
+        self._gc(adapter_id)
+        return latency, nbytes
+
+    def _gc(self, adapter_id: str) -> None:
+        """Drop copies not in the desired placement, always keeping >= 1
+        copy cluster-wide (the paper's Fig 13 delete-after-copy step)."""
+        want = self.desired.get(adapter_id)
+        if not want:
+            return
+        holders = self.index[adapter_id]
+        for sid in sorted(holders):
+            if sid in want:
+                continue
+            if len(holders) == 1:
+                break
+            self.local[sid].discard(adapter_id)
+            holders.discard(sid)
+            self.evictions += 1
+
+    # -- accounting -------------------------------------------------------
+    def server_bytes(self, server_id: int) -> int:
+        return sum(self.meta[a].nbytes for a in self.local[server_id])
+
+    def server_adapter_count(self, server_id: int) -> int:
+        return len(self.local[server_id])
+
+    def max_adapters_per_server(self) -> int:
+        return max((len(s) for s in self.local), default=0)
+
+    def total_bytes(self) -> int:
+        return sum(self.server_bytes(s) for s in range(self.n_servers))
+
+    def check_invariant(self) -> bool:
+        return all(len(self.index[a]) >= 1 for a in self.meta)

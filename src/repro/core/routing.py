@@ -1,0 +1,57 @@
+"""Routing table + phi-weighted request routing (paper Fig 11 steps 1-2).
+
+The routing table holds (adapter_id, server_id, phi) tuples with
+sum(phi) = 1 per adapter; a request is dispatched to server s with
+probability phi_s. Toppings-style request-level routing is implemented in
+baselines.py (it bypasses phi and queries live server load).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Optional, Tuple
+
+from .types import Placement
+
+
+class RoutingTable:
+    def __init__(self, placement: Optional[Placement] = None, seed: int = 0):
+        self._rng = random.Random(seed)
+        self._table: Dict[str, List[Tuple[int, float]]] = {}
+        self.request_counts: Dict[str, int] = {}
+        self.token_counts: Dict[str, float] = {}
+        if placement:
+            self.update(placement)
+
+    def update(self, placement: Placement) -> None:
+        table = {}
+        for aid, entry in placement.items():
+            items = sorted(entry.items())
+            tot = sum(phi for _, phi in items)
+            assert tot > 0, f"adapter {aid} has zero total phi"
+            table[aid] = [(sid, phi / tot) for sid, phi in items]
+        self._table = table
+
+    def servers(self, adapter_id: str) -> List[Tuple[int, float]]:
+        return list(self._table[adapter_id])
+
+    def route(self, adapter_id: str, tokens: float = 0.0) -> int:
+        entry = self._table[adapter_id]
+        self.request_counts[adapter_id] = \
+            self.request_counts.get(adapter_id, 0) + 1
+        self.token_counts[adapter_id] = \
+            self.token_counts.get(adapter_id, 0.0) + tokens
+        if len(entry) == 1:
+            return entry[0][0]
+        u = self._rng.random()
+        acc = 0.0
+        for sid, phi in entry:
+            acc += phi
+            if u <= acc:
+                return sid
+        return entry[-1][0]
+
+    def reset_counts(self) -> Dict[str, int]:
+        counts = self.request_counts
+        self.request_counts = {}
+        self.token_counts = {}
+        return counts

@@ -1,0 +1,12 @@
+"""SGMV LoRA kernels — the compute hot-spot the paper's systems (Punica /
+S-LoRA) optimize with custom kernels, adapted TPU-native (DESIGN.md §3)."""
+from .flash import flash_mha, flash_mha_ref
+from .ops import (bgmv, prepare_segments, sgmv, sgmv_rank_bucketed,
+                  sgmv_reference)
+from .ref import sgmv_expand_ref, sgmv_ref, sgmv_shrink_ref
+from .sgmv import sgmv_expand, sgmv_shrink
+
+__all__ = ["sgmv", "bgmv", "sgmv_rank_bucketed", "prepare_segments",
+           "sgmv_reference", "sgmv_ref", "sgmv_shrink_ref",
+           "sgmv_expand_ref", "sgmv_shrink", "sgmv_expand",
+           "flash_mha", "flash_mha_ref"]

@@ -1,0 +1,112 @@
+"""jit'd wrappers around the SGMV kernels: segment preparation (sort by
+adapter, pad segments to whole blocks), kernel dispatch, and scatter-back.
+
+``sgmv`` is the full LoRA delta y = (x @ A[aid]) @ B[aid] * scaling for a
+ragged multi-adapter token batch. ``bgmv`` is the decode special case
+(block_t=1, one token per block — Punica's BGMV).
+
+A beyond-paper optimization lives here too: ``sgmv_rank_bucketed``
+dispatches each rank *bucket* with its own bank slice, avoiding the
+max-rank padding tax the paper identifies in BGMV/MBGMV (§Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import sgmv_ref
+from .sgmv import sgmv_expand, sgmv_shrink
+
+
+@functools.partial(jax.jit, static_argnames=("n_adapters", "block_t"))
+def prepare_segments(token_adapter, n_adapters: int, block_t: int = 16):
+    """Sort tokens by adapter; give each adapter a whole number of
+    ``block_t`` blocks.
+
+    Returns (dest, block_adapter, T_pad):
+      dest          : (T,) position of each (original-order) token in the
+                      padded, segment-blocked layout
+      block_adapter : (T_pad//block_t,) adapter id per block
+    T_pad is static: T rounded up + one spare block per adapter.
+    """
+    T = token_adapter.shape[0]
+    T_pad = padded_len(T, n_adapters, block_t)
+    order = jnp.argsort(token_adapter)                   # stable
+    aid_s = token_adapter[order]
+    counts = jnp.bincount(token_adapter, length=n_adapters)
+    padded = ((counts + block_t - 1) // block_t) * block_t
+    offs = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                            jnp.cumsum(padded)[:-1]])
+    rank = jnp.arange(T) - (jnp.cumsum(counts) - counts)[aid_s]
+    dest_sorted = offs[aid_s] + rank                     # (T,)
+    dest = jnp.zeros((T,), jnp.int32).at[order].set(
+        dest_sorted.astype(jnp.int32))
+    nblocks = T_pad // block_t
+    block_adapter = jnp.zeros((nblocks,), jnp.int32).at[
+        (dest_sorted // block_t).astype(jnp.int32)].set(
+            aid_s.astype(jnp.int32))
+    return dest, block_adapter
+
+
+def padded_len(T: int, n_adapters: int, block_t: int) -> int:
+    """Static padded token count: every adapter may waste < block_t slots."""
+    return T + n_adapters * block_t
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret",
+                                             "scaling"))
+def sgmv(x, A, B, token_adapter, *, scaling: float = 1.0,
+         block_t: int = 16, interpret: bool = True):
+    """x: (T, d_in); A: (Na, d_in, r); B: (Na, r, d_out);
+    token_adapter: (T,). Returns (T, d_out)."""
+    T, d = x.shape
+    Na = A.shape[0]
+    dest, block_adapter = prepare_segments(token_adapter, Na, block_t)
+    T_pad = padded_len(T, Na, block_t)
+    x_pad = jnp.zeros((T_pad, d), x.dtype).at[dest].set(x)
+    h = sgmv_shrink(x_pad, A, block_adapter, block_t=block_t,
+                    interpret=interpret)
+    y_pad = sgmv_expand(h, B, block_adapter, block_t=block_t,
+                        interpret=interpret)
+    return y_pad[dest] * scaling
+
+
+def bgmv(x, A, B, token_adapter, *, scaling: float = 1.0,
+         interpret: bool = True):
+    """Decode-time per-token gather (Punica BGMV): block_t = 1."""
+    return sgmv(x, A, B, token_adapter, scaling=scaling, block_t=1,
+                interpret=interpret)
+
+
+def sgmv_rank_bucketed(x, banks, token_adapter, adapter_rank_bucket,
+                       *, scaling: float = 1.0, block_t: int = 16,
+                       interpret: bool = True):
+    """Beyond-paper optimization: group adapters into rank buckets, each
+    with its own (A, B) bank pair at its *bucket* rank, so a rank-8 token
+    batched with a rank-128 token pays rank-8 compute, not rank-128.
+
+    banks: list of (A_i, B_i) per bucket; adapter_rank_bucket: (Na,) int
+    mapping adapter -> bucket. Zero rows keep shapes static: every bucket
+    processes the full token set, but with tokens of other buckets routed
+    to a zero adapter slot — compute per bucket is at bucket rank.
+    Total FLOPs = sum_b T * (d*r_b + r_b*o) instead of T * max_r * (d+o).
+    """
+    T, d = x.shape
+    out = None
+    tok_bucket = adapter_rank_bucket[token_adapter]
+    for i, (A, B) in enumerate(banks):
+        # adapter id within the bucket bank; tokens of other buckets -> 0
+        in_bucket = tok_bucket == i
+        local = jnp.where(in_bucket, token_adapter, 0)
+        y = sgmv(jnp.where(in_bucket[:, None], x, 0), A, B, local,
+                 scaling=scaling, block_t=block_t, interpret=interpret)
+        y = jnp.where(in_bucket[:, None], y, 0)
+        out = y if out is None else out + y
+    return out
+
+
+def sgmv_reference(x, A, B, token_adapter, scaling: float = 1.0):
+    """Exported oracle (tests compare kernels against this)."""
+    return sgmv_ref(x, A, B, token_adapter, scaling)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SGMV (segmented gather matrix-multiply) kernels.
+
+Semantics match Punica's SGMV / S-LoRA's MBGMV: every token gathers the
+A/B matrices of *its* adapter from a bank padded to the bank-wide max
+rank, so low-rank adapters pay max-rank compute (the padding tax the
+paper analyzes).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgmv_ref(x, A, B, token_adapter, scaling: float = 1.0):
+    """x: (T, d_in); A: (Na, d_in, r); B: (Na, r, d_out);
+    token_adapter: (T,) int32. Returns (T, d_out)."""
+    a = A[token_adapter]                       # (T, d_in, r)
+    b = B[token_adapter]                       # (T, r, d_out)
+    h = jnp.einsum("td,tdr->tr", x, a.astype(x.dtype))
+    y = jnp.einsum("tr,tro->to", h, b.astype(x.dtype))
+    return y * scaling
+
+
+def sgmv_shrink_ref(x, A, token_adapter):
+    a = A[token_adapter]
+    return jnp.einsum("td,tdr->tr", x, a.astype(x.dtype))
+
+
+def sgmv_expand_ref(h, B, token_adapter, scaling: float = 1.0):
+    b = B[token_adapter]
+    return jnp.einsum("tr,tro->to", h, b.astype(h.dtype)) * scaling

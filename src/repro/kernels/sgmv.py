@@ -1,0 +1,95 @@
+"""Pallas TPU SGMV kernels (shrink + expand), the TPU-native adaptation of
+Punica's segmented-gather GEMM (DESIGN.md §3).
+
+Layout contract (established by ``ops.prepare_segments``): tokens are
+sorted by adapter and padded so each adapter's segment occupies whole
+``block_t``-row blocks. The per-block adapter id array is **scalar
+prefetched** — ``BlockSpec.index_map`` reads it to gather the right A/B
+slice from the HBM-resident bank into VMEM, so each grid step runs a
+dense (block_t × d) × (d × r) MXU matmul with zero gather overhead in the
+inner loop. Everything is padded to the bank max rank — faithfully
+reproducing the max-rank tax of BGMV/MBGMV batches.
+
+VMEM budget per grid step (fp32):
+  shrink: block_t*d + d*r + block_t*r       (d=8192, r=128: ~4.3 MB)
+  expand: block_t*r + r*block_o + block_t*block_o (block_o=2048: ~1.3 MB)
+Both well under the ~16 MB/core VMEM of TPU v5e; block shapes keep the
+MXU dims at multiples of 128 where the model dims allow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _shrink_kernel(aid_ref, x_ref, a_ref, o_ref):
+    x = x_ref[...]                                   # (bt, d)
+    a = a_ref[0]                                     # (d, r)
+    o_ref[...] = jnp.dot(
+        x, a, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _expand_kernel(aid_ref, h_ref, b_ref, o_ref):
+    h = h_ref[...]                                   # (bt, r)
+    b = b_ref[0]                                     # (r, bo)
+    o_ref[...] = jnp.dot(
+        h, b, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def sgmv_shrink(x_pad, A, block_adapter, *, block_t: int = 16,
+                interpret: bool = True):
+    """x_pad: (T_pad, d) segment-blocked; A: (Na, d, r);
+    block_adapter: (nblocks,) int32. Returns (T_pad, r)."""
+    T_pad, d = x_pad.shape
+    Na, _, r = A.shape
+    nblocks = T_pad // block_t
+    return pl.pallas_call(
+        _shrink_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nblocks,),
+            in_specs=[
+                pl.BlockSpec((block_t, d), lambda i, aid: (i, 0)),
+                pl.BlockSpec((1, d, r), lambda i, aid: (aid[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_t, r), lambda i, aid: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T_pad, r), x_pad.dtype),
+        interpret=interpret,
+    )(block_adapter, x_pad, A)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_o", "interpret"))
+def sgmv_expand(h_pad, B, block_adapter, *, block_t: int = 16,
+                block_o: int = 2048, interpret: bool = True):
+    """h_pad: (T_pad, r); B: (Na, r, d_out). Returns (T_pad, d_out)."""
+    T_pad, r = h_pad.shape
+    Na, _, d_out = B.shape
+    bo = min(block_o, d_out)
+    # pad d_out to a multiple of bo
+    pad_o = (-d_out) % bo
+    Bp = jnp.pad(B, ((0, 0), (0, 0), (0, pad_o)))
+    n_ob = (d_out + pad_o) // bo
+    nblocks = T_pad // block_t
+    out = pl.pallas_call(
+        _expand_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nblocks, n_ob),
+            in_specs=[
+                pl.BlockSpec((block_t, r), lambda i, j, aid: (i, 0)),
+                pl.BlockSpec((1, r, bo), lambda i, j, aid: (aid[i], 0, j)),
+            ],
+            out_specs=pl.BlockSpec((block_t, bo),
+                                   lambda i, j, aid: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T_pad, d_out + pad_o), h_pad.dtype),
+        interpret=interpret,
+    )(block_adapter, h_pad, Bp)
+    return out[:, :d_out]

@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, record memory/cost analysis and collective
+traffic for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+MUST be executed as its own process (python -m repro.launch.dryrun ...):
+the XLA_FLAGS line above runs before any jax import so the 512 placeholder
+host devices exist. Nothing else in the repo sets this flag.
+"""
+
+import argparse
+import json
+import re
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, ASSIGNED_ARCH_IDS, INPUT_SHAPES, \
+    get_config
+from repro.models.common import axis_env
+
+from .mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, batch_axes,
+                   make_production_mesh)
+from .specs import build_case, effective_config
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_BLOCK_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Sum the result-type bytes of an HLO instruction line (LHS types,
+    before the opcode). Post-SPMD operands have no inline types, so the
+    result size is the per-device traffic proxy for each collective."""
+    lhs = line.split("= ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    # types come first, terminated by the opcode word
+    m = re.match(r"\s*(\(?[a-z0-9\[\],\{\}\s/\*_]+?\)?)\s+[a-z\-]+\(", rhs)
+    head = m.group(1) if m else rhs.split("(")[0]
+    return sum(_shape_bytes(t.group(1), t.group(2))
+               for t in _TYPE_RE.finditer(head))
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device collective traffic by op kind, accounting for scan/while
+    trip counts (a collective inside a layer scan executes n_layers times).
+
+    Parses the post-SPMD HLO module into computations, finds each while
+    op's trip count (max s32 constant in its condition computation), and
+    propagates multipliers ENTRY -> callees.
+    """
+    blocks = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        m = _BLOCK_RE.match(stripped)
+        if m and stripped.endswith("{"):
+            cur = m.group(1)
+            blocks[cur] = []
+            if raw.startswith("ENTRY") or stripped.startswith("ENTRY"):
+                entry = cur
+            if "ENTRY" in raw.split("%")[0]:
+                entry = cur
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            blocks[cur].append(stripped)
+
+    if entry is None:       # fall back: computation containing ROOT + most lines
+        entry = max(blocks, key=lambda b: len(blocks[b])) if blocks else None
+
+    # per-block collective bytes and call edges
+    coll = {}
+    edges = {}
+    for name, lines in blocks.items():
+        per_kind = {}
+        out_edges = []
+        for line in lines:
+            cm = _COLL_RE.search(line)
+            if cm and "= " in line:
+                kind = cm.group(1)
+                per_kind[kind] = per_kind.get(kind, 0) + _result_bytes(line)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = 1
+                consts = [int(c) for c in
+                          _CONST_RE.findall("\n".join(blocks.get(cond, [])))]
+                consts = [c for c in consts if 1 <= c <= 10_000_000]
+                if consts:
+                    trip = max(consts)
+                out_edges.append((body, trip))
+                out_edges.append((cond, trip))
+                continue
+            for tm in _CALL_RE.finditer(line):
+                out_edges.append((tm.group(1), 1))
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    out_edges.append((b.strip().lstrip("%"), 1))
+        coll[name] = per_kind
+        edges[name] = out_edges
+
+    # propagate multipliers from entry (call graph is a DAG)
+    mult = {name: 0 for name in blocks}
+    if entry:
+        mult[entry] = 1
+        order = [entry]
+        seen = {entry}
+        i = 0
+        while i < len(order):
+            b = order[i]
+            i += 1
+            for child, factor in edges.get(b, []):
+                if child in mult:
+                    mult[child] += mult[b] * factor
+                    if child not in seen:
+                        seen.add(child)
+                        order.append(child)
+
+    totals = {}
+    for name, per_kind in coll.items():
+        m = mult.get(name, 0)
+        if m == 0 and per_kind:
+            m = 1          # not reached by the parser's call graph: count once
+        for kind, nbytes in per_kind.items():
+            totals[kind] = totals.get(kind, 0) + nbytes * m
+    return totals
+
+
+_SHAPE_ONLY_PRIMS = {
+    "broadcast_in_dim", "reshape", "transpose", "slice", "dynamic_slice",
+    "dynamic_update_slice", "concatenate", "gather", "scatter",
+    "scatter-add", "convert_element_type", "iota", "squeeze", "pad",
+    "select_n", "rev", "copy", "argsort", "sort", "top_k", "bitcast",
+    "stop_gradient", "reduce_precision", "split", "device_put",
+}
+
+
+def jaxpr_flops(jaxpr) -> float:
+    """Exact traced FLOPs, scan-trip-aware: 2*M*N*K per dot_general,
+    `length` x body for scans, 1 FLOP/element for other compute prims.
+    This is the trip-count-corrected 'HLO_FLOPs' for the roofline (XLA's
+    cost_analysis visits while bodies once)."""
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            (lc, _), _ = eqn.params["dimension_numbers"]
+            lhs = eqn.invars[0].aval
+            out = eqn.outvars[0].aval
+            k = 1
+            for i in lc:
+                k *= lhs.shape[i]
+            total += 2.0 * out.size * k
+        elif prim == "scan":
+            total += eqn.params["length"] * jaxpr_flops(
+                eqn.params["jaxpr"].jaxpr)
+        elif prim == "while":
+            # not used by our models; count body once conservatively
+            total += jaxpr_flops(eqn.params["body_jaxpr"].jaxpr)
+        else:
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+            if inner is not None:
+                total += jaxpr_flops(getattr(inner, "jaxpr", inner))
+            elif prim not in _SHAPE_ONLY_PRIMS:
+                total += float(sum(
+                    v.aval.size for v in eqn.outvars
+                    if hasattr(v.aval, "size")))
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.n_params()
+    if cfg.moe is not None:
+        e = cfg.moe
+        expert_p = 3 * cfg.d_model * e.d_ff_expert * cfg.n_layers
+        n = n - e.n_experts * expert_p + e.top_k * expert_p
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                   else 1)
+    mult = 6 if shape.mode == "train" else 2
+    return float(mult) * n * tokens
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             dtype=jnp.bfloat16):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    with mesh:
+        with axis_env(batch=batch_axes(mesh), model="model", mesh=mesh):
+            fn, args, shardings, donate = build_case(cfg, shape_name, mesh,
+                                                     dtype)
+            jitted = jax.jit(fn, in_shardings=shardings,
+                             donate_argnums=donate)
+            traced = jax.make_jaxpr(fn)(*args)
+            flops = jaxpr_flops(traced.jaxpr)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    arg_b = float(getattr(mem, "argument_size_in_bytes", 0) or 0)
+    out_b = float(getattr(mem, "output_size_in_bytes", 0) or 0)
+    tmp_b = float(getattr(mem, "temp_size_in_bytes", 0) or 0)
+    # Per-device HBM traffic proxy: every argument/output byte crosses HBM
+    # once; temps are written+read (see EXPERIMENTS.md §Roofline notes).
+    hbm_traffic = arg_b + out_b + 2.0 * tmp_b
+    coll_total = float(sum(coll.values()))    # per-device (post-SPMD HLO)
+    mf = model_flops(effective_config(cfg, shape_name), shape)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "compile_s": round(t_compile, 1),
+        "hlo_flops": flops,                       # global, trip-corrected
+        "hlo_bytes": hbm_traffic,                 # per-device proxy
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll_total,
+        "collectives": coll,
+        "model_flops": mf,
+        "useful_flops_frac": mf / flops if flops else None,
+        "memory": {
+            "argument_bytes": arg_b,
+            "output_bytes": out_b,
+            "temp_bytes": tmp_b,
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        # roofline terms (seconds):
+        #   compute: global FLOPs spread over all chips at bf16 peak
+        #   memory:  per-device HBM traffic at HBM bandwidth
+        #   collective: per-device collective bytes over one ICI link
+        "t_compute": flops / (chips * PEAK_FLOPS_BF16),
+        "t_memory": hbm_traffic / HBM_BW,
+        "t_collective": coll_total / ICI_BW,
+    }
+    terms = {"compute": result["t_compute"], "memory": result["t_memory"],
+             "collective": result["t_collective"]}
+    result["bottleneck"] = max(terms, key=terms.get)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all' (assigned), or comma list")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--case-timeout", type=int, default=1800,
+                    help="seconds per (arch, shape, mesh) case")
+    args = ap.parse_args()
+
+    class CaseTimeout(Exception):
+        pass
+
+    def _alarm(signum, frame):
+        raise CaseTimeout()
+
+    signal.signal(signal.SIGALRM, _alarm)
+
+    archs = (ASSIGNED_ARCH_IDS if args.arch == "all"
+             else args.arch.split(","))
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"SKIP {tag} (exists)")
+                    continue
+                try:
+                    signal.alarm(args.case_timeout)
+                    res = run_case(arch, shape, mp)
+                    signal.alarm(0)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    print(f"OK   {tag}: compile={res['compile_s']}s "
+                          f"bottleneck={res['bottleneck']} "
+                          f"tc={res['t_compute']:.3e} "
+                          f"tm={res['t_memory']:.3e} "
+                          f"tx={res['t_collective']:.3e}")
+                except Exception as e:  # noqa: BLE001
+                    signal.alarm(0)
+                    failures.append((tag, repr(e)[:300]))
+                    print(f"FAIL {tag}: {repr(e)[:300]}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh builders. Functions, not module-level constants, so
+importing this module never touches jax device state.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis extends data parallelism across the ICI-connected superpod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch dimension."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def batch_shard_size(mesh) -> int:
+    import math
+    return math.prod(mesh.shape[a] for a in batch_axes(mesh))
+
+
+# TPU v5e hardware constants (per chip) for the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # bytes/s
+ICI_BW = 50e9                  # bytes/s per link

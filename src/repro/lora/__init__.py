@@ -1,0 +1,6 @@
+from .adapter import (Adapter, init_adapter, init_bank, merge_adapter,
+                      bank_nbytes)
+from .batched import lora_delta, make_lora_cb
+
+__all__ = ["Adapter", "init_adapter", "init_bank", "merge_adapter",
+           "bank_nbytes", "lora_delta", "make_lora_cb"]

@@ -1,0 +1,131 @@
+"""LoRA adapters: single-adapter pytrees and stacked multi-adapter banks.
+
+A *bank* holds ``n_adapters`` adapters padded to a common ``max_rank`` —
+exactly the layout Punica/S-LoRA kernels consume, and the layout in which
+the padding tax the paper analyzes (§III-A.5) arises: every request in a
+co-batch pays ``max_rank`` compute. Adapters of rank r < max_rank are
+zero-padded (rows/cols beyond r contribute nothing numerically but fully
+participate in the matmuls).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Adapter:
+    """Metadata for one serving adapter (the unit the orchestrator places)."""
+    adapter_id: str
+    rank: int
+    base_model: str = "llama-7b-paper"
+
+    def nbytes(self, cfg) -> int:
+        """Host-memory footprint (bf16): A+B on every target, all layers."""
+        total = 0
+        for t in cfg.lora.targets:
+            in_dim = _target_in_dim(cfg, t)
+            out_dim = _target_out_dim(cfg, t)
+            total += in_dim * self.rank + self.rank * out_dim
+        return 2 * total * cfg.n_layers  # 2 bytes / param
+
+
+def _target_out_dim(cfg, target: str) -> int:
+    hd = cfg.resolved_head_dim or cfg.d_model
+    H, Kv = cfg.n_heads or 1, cfg.n_kv_heads or 1
+    if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        return cfg.d_model
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"q": H * (m.qk_nope_head_dim + m.qk_rope_head_dim),
+                "k": m.kv_lora_rank + m.qk_rope_head_dim,
+                "v": m.kv_lora_rank + m.qk_rope_head_dim,
+                "o": cfg.d_model}[target]
+    return {"q": H * hd, "k": Kv * hd, "v": Kv * hd, "o": cfg.d_model}[target]
+
+
+def _target_in_dim(cfg, target: str) -> int:
+    if target != "o":
+        return cfg.d_model
+    if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        return cfg.d_model
+    if cfg.mla is not None:
+        return cfg.n_heads * cfg.mla.v_head_dim
+    return cfg.n_heads * cfg.resolved_head_dim
+
+
+def init_adapter(cfg, rank: int, key, n_layers=None, dtype=jnp.float32):
+    """Single adapter: {target: {"A": (L,d,r), "B": (L,r,out)}}.
+
+    A ~ N(0, 1/d); B = 0 (standard LoRA init).
+    """
+    L = n_layers if n_layers is not None else cfg.n_layers
+    d = cfg.d_model
+    out = {}
+    for t in cfg.lora.targets:
+        key, ka = jax.random.split(key)
+        o = _target_out_dim(cfg, t)
+        in_dim = _target_in_dim(cfg, t)
+        out[t] = {
+            "A": dense_init(ka, (L, in_dim, rank), fan_in=in_dim, dtype=dtype),
+            "B": jnp.zeros((L, rank, o), dtype),
+        }
+    return out
+
+
+def init_bank(cfg, ranks, key, n_layers=None, dtype=jnp.float32):
+    """Stacked bank: {target: {"A": (L, Na, d, max_r), "B": (L, Na, max_r, o)}}.
+
+    Adapters with rank < max(ranks) are zero-padded to max rank — the
+    max-rank padding semantics of BGMV/MBGMV.
+    """
+    max_r = max(ranks)
+    singles = []
+    for r in ranks:
+        key, k2 = jax.random.split(key)
+        a = init_adapter(cfg, r, k2, n_layers=n_layers, dtype=dtype)
+        # pad rank dim to max_r
+        a = jax.tree.map(lambda t: _pad_rank(t, max_r), a)
+        singles.append(a)
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *singles)
+
+
+def _pad_rank(t: jax.Array, max_r: int) -> jax.Array:
+    # A: (L, in, r) -> pad last; B: (L, r, out) -> pad middle
+    if t.shape[-1] <= max_r and t.shape[-2] > t.shape[-1]:
+        return jnp.pad(t, ((0, 0), (0, 0), (0, max_r - t.shape[-1])))
+    return jnp.pad(t, ((0, 0), (0, max_r - t.shape[-2]), (0, 0)))
+
+
+def merge_adapter(params, adapter, cfg, scaling: float = 1.0):
+    """Merge a single adapter into base weights (the paper's §II-B note:
+    zero-overhead serving for very hot adapters merged into a dedicated
+    instance)."""
+    import copy
+    merged = jax.tree.map(lambda x: x, params)  # shallow structural copy
+    name_map = {"q": "wq", "k": "wk", "v": "wv", "o": "wo"}
+    blocks = merged.get("blocks")
+    if blocks is None:
+        raise ValueError("merge_adapter supports uniform-stack archs")
+    attn = dict(blocks["attn"])
+    for t, w_name in name_map.items():
+        if t not in adapter:
+            continue
+        delta = jnp.einsum("ldr,lro->ldo", adapter[t]["A"], adapter[t]["B"])
+        if w_name in attn:
+            attn[w_name] = attn[w_name] + scaling * delta.astype(
+                attn[w_name].dtype)
+    blocks = dict(blocks)
+    blocks["attn"] = attn
+    merged = dict(merged)
+    merged["blocks"] = blocks
+    return merged
+
+
+def bank_nbytes(bank) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(bank))

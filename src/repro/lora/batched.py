@@ -1,0 +1,49 @@
+"""Batched heterogeneous-adapter application.
+
+Two execution paths:
+  * gather-einsum (default, lowerable on any backend; used by the dry-run
+    and the CPU engine) — per-row adapter index gathers its A/B from the
+    bank, everything padded to the bank's max rank (the paper's co-batch
+    padding tax, faithfully);
+  * Pallas SGMV (``repro.kernels.ops``) — TPU kernel path, validated in
+    interpret mode, selected via ``use_pallas=True`` for token-major
+    flattened layouts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import constrain
+
+
+def lora_delta(x, A, B, idx, scaling: float = 1.0):
+    """x: (Bt, S, d); A: (Na, d, r); B: (Na, r, out); idx: (Bt,) int32.
+
+    Every row pays max-rank (r = bank rank) cost regardless of its
+    adapter's true rank — zero-padded banks make the extra columns
+    numerically inert but computationally present (BGMV semantics).
+    """
+    from repro.models.common import SHARDING_MODE
+    a = A[idx]                                   # (Bt, d, r)
+    b = B[idx]                                   # (Bt, r, out)
+    h = jnp.einsum("bsd,bdr->bsr", x, a.astype(x.dtype))
+    if SHARDING_MODE == "baseline":
+        # S-LoRA TP: rank dim sharded -> partial sums all-reduced
+        h = constrain(h, "batch", None, "model")
+    out = jnp.einsum("bsr,bro->bso", h, b.astype(x.dtype))
+    return constrain(out * scaling, "batch", None, None)
+
+
+def make_lora_cb(bank_layer, idx, scaling: float = 1.0):
+    """Bind one layer's bank slice {target: {"A","B"}} and per-row adapter
+    indices into the projection hook used by the attention/ssm blocks."""
+    if bank_layer is None:
+        return None
+
+    def cb(name, x):
+        t = bank_layer.get(name)
+        if t is None:
+            return 0.0
+        return lora_delta(x, t["A"], t["B"], idx, scaling)
+
+    return cb

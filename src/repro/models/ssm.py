@@ -1,0 +1,223 @@
+"""State-space blocks: Mamba2 (SSD recurrence, zamba2 hybrid) and RWKV-6
+"Finch" (data-dependent decay WKV). Both expose full-sequence (scan over
+time) and single-step decode forms with explicit state pytrees.
+
+Simplifications (documented in DESIGN.md §4): Mamba2 omits the depthwise
+conv-4 front; RWKV6 uses learned per-channel token-shift mixing vectors
+(the ddlerp LoRA is kept only for the decay, which is the defining
+data-dependent component of RWKV-6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, constrain_resid, dense_init, rmsnorm
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    H = inner // s.head_dim
+    return inner, H, s.head_dim, s.d_state
+
+
+def init_mamba2(cfg, key, dtype=jnp.float32):
+    d = cfg.d_model
+    inner, H, hd, N = mamba_dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_xz": dense_init(ks[0], (d, 2 * inner), dtype=dtype),
+        "w_bc": dense_init(ks[1], (d, 2 * N), dtype=dtype),
+        "w_dt": dense_init(ks[2], (d, H), dtype=dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "ln_y": jnp.ones((inner,), dtype),
+        "w_out": dense_init(ks[3], (inner, d), fan_in=inner, dtype=dtype),
+    }
+
+
+def mamba2_state(cfg, batch, dtype=jnp.float32):
+    _, H, hd, N = mamba_dims(cfg)
+    return jnp.zeros((batch, H, hd, N), dtype)
+
+
+def _mamba_proj(cfg, p, u):
+    """u: (B,S,d) -> x (B,S,H,hd), z (B,S,inner), b,c (B,S,N), a (B,S,H),
+    dt (B,S,H)."""
+    inner, H, hd, N = mamba_dims(cfg)
+    xz = u @ p["w_xz"]
+    xz = constrain(xz, "batch", None, "model")
+    x, z = jnp.split(xz, 2, axis=-1)
+    bc = u @ p["w_bc"]
+    b, c = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(u @ p["w_dt"] + p["dt_bias"])      # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                  # decay in (0,1)
+    x = x.reshape(*x.shape[:-1], H, hd)
+    return x, z, b, c, a, dt
+
+
+def _mamba_out(cfg, p, y, z, x, dt):
+    """y: (B,S,H,hd) ssm output; gate and project."""
+    B, S = y.shape[:2]
+    inner, H, hd, N = mamba_dims(cfg)
+    y = y + p["D"][:, None] * x                              # skip
+    y = y.reshape(B, S, inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["ln_y"], cfg.rmsnorm_eps)
+    out = y @ p["w_out"]
+    return constrain_resid(out)
+
+
+def mamba2_full(cfg, p, u, state):
+    """u: (B,S,d); state: (B,H,hd,N). Returns (out, new_state)."""
+    x, z, b, c, a, dt = _mamba_proj(cfg, p, u)
+    dtx = x * dt[..., None]                                  # (B,S,H,hd)
+
+    def step(s, inp):
+        xt, bt, ct, at = inp                                 # (B,H,hd),(B,N),(B,H)
+        s = s * at[..., None, None] + xt[..., None] * bt[:, None, None, :]
+        yt = jnp.einsum("bhdn,bn->bhd", s, ct)
+        return s, yt
+
+    xs = (dtx.transpose(1, 0, 2, 3), b.transpose(1, 0, 2),
+          c.transpose(1, 0, 2), a.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                             jax.tree.map(lambda t: t.astype(jnp.float32), xs))
+    y = ys.transpose(1, 0, 2, 3).astype(u.dtype)             # (B,S,H,hd)
+    return _mamba_out(cfg, p, y, z, x, dt), state.astype(u.dtype)
+
+
+def mamba2_step(cfg, p, u, state):
+    """u: (B,1,d); state: (B,H,hd,N)."""
+    x, z, b, c, a, dt = _mamba_proj(cfg, p, u)
+    xt, bt, ct, at = x[:, 0], b[:, 0], c[:, 0], a[:, 0]
+    dtx = xt * dt[:, 0, :, None]
+    s32 = state.astype(jnp.float32)
+    s32 = s32 * at[..., None, None] + \
+        (dtx[..., None] * bt[:, None, None, :]).astype(jnp.float32)
+    yt = jnp.einsum("bhdn,bn->bhd", s32, ct.astype(jnp.float32))
+    y = yt[:, None].astype(u.dtype)
+    return _mamba_out(cfg, p, y, z, x, dt), s32.astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+_DECAY_LORA = 64
+
+
+def rwkv_dims(cfg):
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv6(cfg, key, dtype=jnp.float32):
+    d, ff = cfg.d_model, cfg.d_ff
+    H, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], (d, d), dtype=dtype),
+        "w_k": dense_init(ks[1], (d, d), dtype=dtype),
+        "w_v": dense_init(ks[2], (d, d), dtype=dtype),
+        "w_g": dense_init(ks[3], (d, d), dtype=dtype),
+        "w_o": dense_init(ks[4], (d, d), dtype=dtype),
+        "w0": jnp.full((d,), -1.0, dtype),                 # decay base
+        "wa1": dense_init(ks[5], (d, _DECAY_LORA), dtype=dtype),
+        "wa2": dense_init(ks[6], (_DECAY_LORA, d),
+                          fan_in=_DECAY_LORA, dtype=dtype),
+        "u": jnp.zeros((H, hd), dtype),                    # bonus
+        "ln_x": jnp.ones((d,), dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "mu_cm": jnp.full((d,), 0.5, dtype),
+        "wk_cm": dense_init(ks[7], (d, ff), dtype=dtype),
+        "wv_cm": dense_init(jax.random.fold_in(key, 99), (ff, d),
+                            fan_in=ff, dtype=dtype),
+    }
+
+
+def rwkv6_state(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    return {
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),  # (k-dim, v-dim)
+        "x_tm": jnp.zeros((batch, d), dtype),               # token-shift (time mix)
+        "x_cm": jnp.zeros((batch, d), dtype),               # token-shift (channel mix)
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) last token of previous chunk."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv_mix(p, x, xx, lora=None):
+    def mix(mu):
+        return x + (xx - x) * mu
+
+    r = mix(p["mu_r"]) @ p["w_r"] + (lora("q", mix(p["mu_r"])) if lora else 0.0)
+    k = mix(p["mu_k"]) @ p["w_k"] + (lora("k", mix(p["mu_k"])) if lora else 0.0)
+    v = mix(p["mu_v"]) @ p["w_v"] + (lora("v", mix(p["mu_v"])) if lora else 0.0)
+    g = mix(p["mu_g"]) @ p["w_g"]
+    xw = mix(p["mu_w"])
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) +
+                         (jnp.tanh(xw @ p["wa1"]) @ p["wa2"]).astype(jnp.float32)))
+    return r, k, v, g, w
+
+
+def _rwkv_wkv(cfg, r, k, v, w, u, s0):
+    """WKV recurrence. r/k/v/w: (B,S,H,hd); s0: (B,H,hd,hd) fp32."""
+    B, S, H, hd = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                # (B,H,hd)
+        kv = kt[..., None] * vt[..., None, :]               # (B,H,hdk,hdv)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    xs = jax.tree.map(lambda t: t.transpose(1, 0, 2, 3).astype(jnp.float32),
+                      (r, k, v, w))
+    s, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), s                    # (B,S,H,hd), state
+
+
+def rwkv6_time_mix(cfg, p, x, state, lora=None):
+    """x: (B,S,d) (post-ln). Returns (out, new_state pieces)."""
+    B, S, d = x.shape
+    H, hd = rwkv_dims(cfg)
+    xx = _token_shift(x, state["x_tm"])
+    r, k, v, g, w = _rwkv_mix(p, x, xx, lora)
+    rs = r.reshape(B, S, H, hd)
+    ks_ = k.reshape(B, S, H, hd)
+    vs = v.reshape(B, S, H, hd)
+    ws = w.reshape(B, S, H, hd)
+    out, s = _rwkv_wkv(cfg, rs, ks_, vs, ws, p["u"].astype(jnp.float32),
+                       state["wkv"])
+    out = out.reshape(B, S, d).astype(x.dtype)
+    out = rmsnorm(out, p["ln_x"], cfg.rmsnorm_eps) * jax.nn.silu(g)
+    out = out @ p["w_o"] + (lora("o", out) if lora else 0.0)
+    new_state = {"wkv": s, "x_tm": x[:, -1, :]}
+    return constrain_resid(out), new_state
+
+
+def rwkv6_channel_mix(cfg, p, x, state):
+    xx = _token_shift(x, state["x_cm"])
+    xm = x + (xx - x) * p["mu_cm"]
+    h = jnp.square(jax.nn.relu(xm @ p["wk_cm"]))
+    h = constrain(h, "batch", None, "model")
+    out = h @ p["wv_cm"]
+    return constrain_resid(out), {"x_cm": x[:, -1, :]}

@@ -1,0 +1,5 @@
+from .engine import ServingEngine
+from .metrics import MetricsCollector, percentile
+from .request import Phase, Request
+from .scheduler import replay
+from .paging import OutOfPages, UnifiedPagePool

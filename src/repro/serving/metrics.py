@@ -1,0 +1,37 @@
+"""Latency metrics: TTFT / TBT percentiles over finished requests."""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+
+def percentile(values: List[float], p: float) -> float:
+    if not values:
+        return float("nan")
+    vs = sorted(values)
+    idx = min(len(vs) - 1, max(0, int(p / 100.0 * (len(vs) - 1))))
+    return vs[idx]
+
+
+class MetricsCollector:
+    def __init__(self):
+        self.ttfts: List[float] = []
+        self.tbts: List[float] = []
+        self.finished = 0
+
+    def record(self, req) -> None:
+        self.finished += 1
+        if req.ttft is not None:
+            self.ttfts.append(req.ttft)
+        if req.tbt is not None:
+            self.tbts.append(req.tbt)
+
+    def summary(self) -> dict:
+        return {
+            "finished": self.finished,
+            "p50_ttft": percentile(self.ttfts, 50),
+            "p95_ttft": percentile(self.ttfts, 95),
+            "p99_ttft": percentile(self.ttfts, 99),
+            "mean_tbt": (sum(self.tbts) / len(self.tbts)
+                         if self.tbts else float("nan")),
+            "p95_tbt": percentile(self.tbts, 95),
+        }

@@ -1,0 +1,31 @@
+"""Trace-driven driver for a ServingEngine: replays (arrival, request)
+streams against wall-clock time, collecting TTFT/TBT."""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List
+
+from .engine import ServingEngine
+from .request import Request
+
+
+def replay(engine: ServingEngine, requests: List[Request],
+           speedup: float = 1.0, max_iters: int = 1_000_000) -> dict:
+    """Feed `requests` (with .arrival in seconds) into the engine in real
+    time (optionally compressed by `speedup`), stepping the engine
+    continuously. Returns metrics summary."""
+    pending = sorted(requests, key=lambda r: r.arrival)
+    t0 = time.monotonic()
+    i = 0
+    iters = 0
+    while (i < len(pending) or engine.queue or engine.active) \
+            and iters < max_iters:
+        now = (time.monotonic() - t0) * speedup
+        while i < len(pending) and pending[i].arrival <= now:
+            r = pending[i]
+            r.arrival = t0 + r.arrival / speedup
+            engine.submit(r)
+            i += 1
+        engine.step()
+        iters += 1
+    return engine.metrics.summary()

@@ -1,0 +1,2 @@
+from .production import production_adapters, production_trace
+from .synth import make_adapters, six_traces, synth_trace

@@ -1,0 +1,60 @@
+"""Msgpack-based checkpointing for arbitrary pytrees of arrays.
+
+Layout: one .msgpack file holding {flat_key: {dtype, shape, data}} plus a
+'treedef' discriminator via the flat key paths — robust across runs
+without pickling python objects.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/[{i}]"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    flat = _flatten(tree)
+    payload = {}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        payload[k] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "data": arr.tobytes()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    flat_like = _flatten(like)
+    restored = {}
+    for k, v in flat_like.items():
+        ent = payload[k]
+        arr = np.frombuffer(ent["data"], dtype=ent["dtype"]).reshape(
+            ent["shape"])
+        restored[k] = jnp.asarray(arr)
+    # rebuild via tree structure of `like`
+    leaves_like, treedef = jax.tree.flatten(like)
+    keys = sorted(_flatten(like).keys())
+    # order of jax.tree.flatten on dicts is sorted-key order, matching ours
+    ordered = [restored[k] for k in keys]
+    return jax.tree.unflatten(treedef, ordered)

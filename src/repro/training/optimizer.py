@@ -1,0 +1,89 @@
+"""Pure-JAX optimizers (no optax dependency): AdamW with decoupled weight
+decay and global-norm gradient clipping, over arbitrary param pytrees.
+Optimizer state moments are kept in float32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(1, cfg.total_steps - cfg.warmup_steps),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * \
+        0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params,
+                 trainable_mask=None):
+    """Returns (new_params, new_opt_state, metrics). `trainable_mask` is an
+    optional pytree of bools — frozen leaves pass through unchanged (used
+    for LoRA-only fine-tuning of a frozen base model)."""
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gn + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    if trainable_mask is None:
+        trainable_mask = jax.tree.map(lambda _: True, params)
+
+    def upd(p, g, mu, nu, t):
+        g32 = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * g32 * g32
+        mhat = mu2 / b1c
+        nhat = nu2 / b2c
+        delta = lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        p2 = (p.astype(jnp.float32) - delta).astype(p.dtype)
+        keep = jnp.asarray(t)
+        return (jnp.where(keep, p2, p), jnp.where(keep, mu2, mu),
+                jnp.where(keep, nu2, nu))
+
+    out = jax.tree.map(upd, params, grads, opt_state["mu"],
+                       opt_state["nu"], trainable_mask)
+    treedef = jax.tree.structure(params)
+    leaves = treedef.flatten_up_to(out)
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_mu = treedef.unflatten([l[1] for l in leaves])
+    new_nu = treedef.unflatten([l[2] for l in leaves])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_p, new_state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,65 @@
+"""Train steps: full-parameter pretraining and LoRA-only fine-tuning
+(frozen base + one adapter, the workload that *produces* the adapters the
+serving system multiplexes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.lora.batched import make_lora_cb
+from repro.models import model as M
+from repro.models.common import chunked_cross_entropy
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, remat: bool = True):
+    """Full-parameter train step: (params, opt_state, batch) ->
+    (params, opt_state, metrics). batch: {tokens, labels[, frontend]}."""
+
+    def loss(params, batch):
+        return M.loss_fn(cfg, params, batch, remat=remat)
+
+    def step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(loss)(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state,
+                                             params)
+        return params, opt_state, {"loss": l, **om}
+
+    return step
+
+
+def make_lora_train_step(cfg, opt_cfg: AdamWConfig, remat: bool = True,
+                         scaling: float = 1.0):
+    """LoRA fine-tune step: base params frozen, one adapter trained.
+
+    adapter: {target: {"A": (L,d,r), "B": (L,r,out)}} (repro.lora.adapter).
+    """
+
+    def loss(adapter, params, batch):
+        bank = jax.tree.map(lambda t: t[:, None], adapter)  # Na=1 bank
+        B = batch["tokens"].shape[0]
+        idx = jnp.zeros((B,), jnp.int32)
+        h, aux = M.forward(cfg, params, batch["tokens"],
+                           frontend=batch.get("frontend"), bank=bank,
+                           lora_idx=idx, remat=remat)
+        return chunked_cross_entropy(h, M.lm_head(cfg, params),
+                                     batch["labels"]) + 0.01 * aux
+
+    def step(adapter, opt_state, params, batch):
+        l, grads = jax.value_and_grad(loss)(adapter, params, batch)
+        adapter, opt_state, om = adamw_update(opt_cfg, grads, opt_state,
+                                              adapter)
+        return adapter, opt_state, {"loss": l, **om}
+
+    return step
+
+
+def init_train_state(cfg, key, opt_cfg: Optional[AdamWConfig] = None,
+                     dtype=jnp.float32):
+    params = M.init_params(cfg, key, dtype)
+    return params, adamw_init(params)

@@ -1,0 +1,13 @@
+import os
+
+# Tests see the single real CPU device; only launch/dryrun.py (run as its
+# own process) forces 512 placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+# Pin the backend to the single real CPU device NOW, before any test
+# module import can touch XLA_FLAGS (repro.launch.dryrun sets the
+# 512-placeholder-device flag at import for its own __main__ use).
+assert len(jax.devices()) == 1

@@ -1,0 +1,78 @@
+"""Demand estimator + cost-model calibration facts from the paper."""
+import pytest
+
+from repro.cluster import ServerModel, co_serving_slowdown, make_server, \
+    profile_operating_points
+from repro.core import DemandEstimator
+
+
+def test_demand_tracks_level():
+    d = DemandEstimator()
+    for _ in range(10):
+        d.observe("a", 100.0)
+    assert abs(d.extrapolate("a") - 100.0) < 5.0
+
+
+def test_demand_extrapolates_trend():
+    d = DemandEstimator()
+    for t in range(10):
+        d.observe("a", 100.0 + 10.0 * t)
+    # next value should be projected above the last observation
+    assert d.extrapolate("a") > 190.0
+
+
+def test_demand_nonnegative():
+    d = DemandEstimator()
+    for t in range(10):
+        d.observe("a", max(0.0, 100.0 - 30.0 * t))
+    assert d.extrapolate("a") >= 0.0
+
+
+def test_fig3_rank_ratio_tp1():
+    """Fig 3: rank-128 prefill ~2.7x rank-8 at input 2000, TP=1."""
+    s = ServerModel(tp=1)
+    r = s.prefill_time(2000, 128) / s.prefill_time(2000, 8)
+    assert 2.3 < r < 3.1
+
+
+def test_fig5_tp8_residual():
+    """Fig 5: ~20% residual TTFT inflation for rank-128 at TP=8."""
+    s = ServerModel(tp=8)
+    r = s.prefill_time(2000, 128) / s.prefill_time(2000, 8)
+    assert 1.1 < r < 1.35
+
+
+def test_fig4_model_size_amplifies():
+    """Fig 4: rank heterogeneity penalty grows with model size (~45%
+    degradation at 70B TP=8)."""
+    s7 = make_server("llama-7b", tp=8)
+    s70 = make_server("llama-70b", tp=8)
+    r7 = s7.prefill_time(2000, 128) / s7.prefill_time(2000, 8)
+    r70 = s70.prefill_time(2000, 128) / s70.prefill_time(2000, 8)
+    assert r70 > r7
+    assert 1.3 < r70 < 1.7
+
+
+def test_fig1_coserving_tax():
+    """Fig 1: co-serving r8 with r128 slows the rank-8 batch by a large
+    margin (the paper's P95 skew is +84%; the iteration-level tax here is
+    the max-rank inflation)."""
+    s = ServerModel(tp=4)
+    assert co_serving_slowdown(s, 8, 128) > 1.3
+    assert co_serving_slowdown(s, 8, 8) == 1.0
+    # symmetric-rank co-serving costs nothing extra
+    assert co_serving_slowdown(s, 128, 8) == pytest.approx(1.0)
+
+
+def test_operating_points_decrease_with_rank():
+    ops = profile_operating_points(ServerModel(), [8, 16, 32, 64, 128])
+    vals = [ops[r] for r in sorted(ops)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+
+
+def test_decode_max_rank_padding_tax():
+    """BGMV decode: batch cost tracks the max rank present."""
+    s = ServerModel()
+    t_mixed = s.decode_time(16, 128)
+    t_pure = s.decode_time(16, 8)
+    assert t_mixed > t_pure

@@ -1,0 +1,99 @@
+"""Unit tests for the dry-run tooling: collective-bytes HLO parser
+(trip-count multipliers), jaxpr FLOP counter, and spec fitting."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.specs import fit_spec
+
+
+def _dryrun():
+    # imported lazily: repro.launch.dryrun sets XLA_FLAGS at module level
+    # (harmless after conftest pins the backend, but keep imports scoped)
+    from repro.launch import dryrun
+    return dryrun
+
+HLO = """
+HloModule test
+
+%cond.1 (arg: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(24)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(%x), channel_id=1, replica_groups={}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+ENTRY %main.1 (a: f32[16]) -> f32[16] {
+  %a = f32[16] parameter(0)
+  %ag = f32[16]{0} all-gather(%a), channel_id=2, dimensions={0}
+  %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[16] add(%ag, %ag)
+}
+"""
+
+
+def test_collective_parser_trip_counts():
+    totals = _dryrun().collective_bytes(HLO)
+    # all-gather in entry: 16 floats = 64 bytes, once
+    assert totals["all-gather"] == 64
+    # all-reduce inside the while body: 8 floats = 32 bytes x 24 trips
+    assert totals["all-reduce"] == 32 * 24
+
+
+def test_jaxpr_flops_dot_and_scan():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        c, _ = jax.lax.scan(body, x, None, length=5)
+        return c
+
+    x = jnp.ones((4, 8))
+    w = jnp.ones((8, 8))
+    jaxpr = jax.make_jaxpr(f)(x, w)
+    flops = _dryrun().jaxpr_flops(jaxpr.jaxpr)
+    # 5 scan steps x 2*4*8*8 dot flops
+    assert flops == 5 * 2 * 4 * 8 * 8
+
+
+def test_jaxpr_flops_counts_elementwise():
+    def f(x):
+        return jnp.exp(x) * 2.0
+
+    jaxpr = jax.make_jaxpr(f)(jnp.ones((16,)))
+    assert _dryrun().jaxpr_flops(jaxpr.jaxpr) >= 16
+
+
+def test_fit_spec_drops_indivisible():
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 4}
+
+    spec = fit_spec(FakeMesh(), P(None, "model"), (10, 64))
+    assert spec == P(None, "model")
+    spec = fit_spec(FakeMesh(), P(None, "model"), (10, 8))
+    assert spec == P(None, None)          # 8 % 16 != 0 -> dropped
+    spec = fit_spec(FakeMesh(), P(("data", "model"), None), (64, 8))
+    assert spec == P(("data", "model"), None)
+    spec = fit_spec(FakeMesh(), P(("data", "model"), None), (32, 8))
+    assert spec == P(None, None)          # 32 % 64 != 0
+
+
+def test_model_flops_sanity():
+    from repro.configs import INPUT_SHAPES, get_config
+    cfg = get_config("internlm2-1.8b")
+    model_flops = _dryrun().model_flops
+    mf = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    # 6 * ~1.9e9 params * 1M tokens ~ 1.2e16
+    assert 0.5e16 < mf < 3e16
+    mf_dec = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert mf_dec < mf / 1000

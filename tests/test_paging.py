@@ -1,0 +1,111 @@
+"""Unified paging pool (S-LoRA §II-B.2): allocation, decode growth,
+adapter LRU eviction under KV pressure, pool invariants (hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paging import OutOfPages, UnifiedPagePool
+
+
+def test_kv_alloc_and_growth():
+    pool = UnifiedPagePool(n_pages=10, page_tokens=16)
+    pool.alloc_kv("s0", 20)           # 2 pages
+    assert pool.used_pages == 2
+    pool.grow_kv("s0", 33)            # -> 3 pages
+    assert pool.used_pages == 3
+    pool.grow_kv("s0", 33)            # idempotent
+    assert pool.used_pages == 3
+    pool.free_kv("s0")
+    assert pool.used_pages == 0
+    assert pool.check_invariant()
+
+
+def test_adapter_page_in_and_hit():
+    pool = UnifiedPagePool(n_pages=8, page_bytes=1000)
+    assert pool.ensure_adapter("a", 2500) is True     # 3 pages
+    assert pool.ensure_adapter("a", 2500) is False    # hit
+    assert pool.pages_by_kind()["adapter"] == 3
+    assert pool.adapter_page_ins == 1
+
+
+def test_kv_pressure_evicts_lru_adapter():
+    pool = UnifiedPagePool(n_pages=6, page_tokens=16, page_bytes=1000)
+    pool.ensure_adapter("old", 1000)      # 1 page, lru
+    pool.ensure_adapter("new", 1000)      # 1 page
+    pool.ensure_adapter("new", 1000)      # touch
+    pool.alloc_kv("s0", 16 * 5)           # needs 5 pages -> evict "old"
+    assert not pool.has_adapter("old")
+    assert pool.has_adapter("new")
+    assert pool.adapter_evictions == 1
+    assert pool.check_invariant()
+
+
+def test_pinned_adapter_never_evicted():
+    pool = UnifiedPagePool(n_pages=4, page_tokens=16, page_bytes=1000)
+    pool.ensure_adapter("hot", 1000)
+    pool.pin_adapter("hot")
+    pool.ensure_adapter("other", 1000)
+    with pytest.raises(OutOfPages):
+        pool.alloc_kv("s0", 16 * 4)       # would need all 4 pages
+    assert pool.has_adapter("hot")
+
+
+def test_kv_never_evicted():
+    pool = UnifiedPagePool(n_pages=4, page_tokens=16, page_bytes=1000)
+    pool.alloc_kv("s0", 16 * 3)
+    with pytest.raises(OutOfPages):
+        pool.alloc_kv("s1", 16 * 2)
+    assert pool.used_pages == 3
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 60)),
+                min_size=1, max_size=60),
+       st.integers(8, 40))
+def test_pool_invariant_random_ops(ops, n_pages):
+    pool = UnifiedPagePool(n_pages=n_pages, page_tokens=8,
+                           page_bytes=1000)
+    live_kv = []
+    for i, (op, arg) in enumerate(ops):
+        try:
+            if op == 0:
+                sid = f"s{i}"
+                pool.alloc_kv(sid, arg)
+                live_kv.append(sid)
+            elif op == 1 and live_kv:
+                pool.grow_kv(live_kv[-1], arg + 60)
+            elif op == 2 and live_kv:
+                pool.free_kv(live_kv.pop())
+            else:
+                pool.ensure_adapter(f"a{arg % 5}", arg * 100)
+        except OutOfPages:
+            pass
+        assert pool.check_invariant()
+    assert pool.used_pages <= n_pages
+
+
+def test_engine_with_page_pool():
+    """Engine drives the unified pool: KV pages live per request, adapter
+    pages pinned only while co-batched."""
+    import time
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_smoke_config("llama-7b-paper")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pool = UnifiedPagePool(n_pages=512, page_tokens=8, page_bytes=50_000)
+    eng = ServingEngine(cfg, params, {"a-r8": 8, "b-r64": 64},
+                        max_batch=2, max_len=32, page_pool=pool)
+    now = time.monotonic()
+    for i in range(4):
+        eng.submit(Request(i, ["a-r8", "b-r64"][i % 2],
+                           list(range(1, 9)), 4, arrival=now))
+    summ = eng.run_until_drained()
+    assert summ["finished"] == 4
+    assert pool.check_invariant()
+    # all KV freed after drain; adapters may stay resident (cached)
+    assert pool.pages_by_kind()["kv"] == 0
+    assert pool.adapter_page_ins >= 2

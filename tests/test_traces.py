@@ -1,0 +1,63 @@
+"""Trace generator properties (paper §V-E workloads)."""
+import collections
+
+from repro.traces import make_adapters, production_trace, six_traces, \
+    synth_trace
+
+
+def test_make_adapters_counts_and_powerlaw():
+    ads = make_adapters(100, alpha=1.0, seed=0)
+    assert len(ads) == 100
+    by_rank = collections.Counter(a.rank for a in ads)
+    # power law on counts: rank-8 most numerous
+    assert by_rank[8] == max(by_rank.values())
+    assert set(by_rank) == {8, 16, 32, 64, 128}
+
+
+def test_synth_trace_rates():
+    ads = make_adapters(20, seed=0)
+    tr = synth_trace(ads, rps=10, duration=60, arrival="uniform", seed=1)
+    assert abs(len(tr) - 600) <= 1
+    assert all(0 <= r.arrival < 60 for r in tr)
+    tr = synth_trace(ads, rps=10, duration=60, arrival="poisson", seed=1)
+    assert 400 < len(tr) < 800
+
+
+def test_shifting_skew_direction():
+    """Fig 16: rank-128 dominates early, rank-8 dominates late."""
+    ads = make_adapters(50, seed=0)
+    tr = synth_trace(ads, rps=50, duration=200, popularity="shifting",
+                     seed=2)
+    early = [r for r in tr if r.arrival < 40]
+    late = [r for r in tr if r.arrival > 160]
+    frac128_early = sum(r.rank == 128 for r in early) / len(early)
+    frac128_late = sum(r.rank == 128 for r in late) / len(late)
+    assert frac128_early > 0.35
+    assert frac128_late < 0.22
+    frac8_late = sum(r.rank == 8 for r in late) / len(late)
+    assert frac8_late > 0.35
+
+
+def test_exponential_popularity_prefers_small_ranks():
+    ads = make_adapters(50, seed=0)
+    tr = synth_trace(ads, rps=50, duration=100, popularity="exponential",
+                     seed=3)
+    by_rank = collections.Counter(r.rank for r in tr)
+    assert by_rank[8] > by_rank[128]
+
+
+def test_six_traces_grid():
+    ads = make_adapters(25, seed=0)
+    traces = six_traces(ads, rps=5, duration=30)
+    assert len(traces) == 6
+    assert all(len(t) > 0 for t in traces.values())
+
+
+def test_production_trace_heavy_tail():
+    """Fig 8: top-5 adapters take the large majority of requests."""
+    tr = production_trace(100, rps=50, duration=120, seed=4)
+    counts = collections.Counter(r.adapter_id for r in tr)
+    top5 = sum(c for _, c in counts.most_common(5))
+    assert top5 / len(tr) > 0.55
+    ranks = collections.Counter(r.rank for r in tr)
+    assert ranks[8] > ranks[128]  # Fig 15 rank share ordering
