@@ -1,10 +1,13 @@
 """Paper Fig 17/18 — production traces, 50/100/200 adapters, 4 servers:
-P95 TTFT + per-server balance + adapter storage per policy."""
+P95 TTFT + per-server balance + adapter storage per policy, served
+through the unified ``LoRAServeCluster`` facade on the simulated
+backend."""
 from __future__ import annotations
 
 import copy
 
-from repro.cluster import ClusterSimulator
+from repro.cluster import NetworkModel
+from repro.serving import LoRAServeCluster, SimBackend, percentile
 from repro.traces import make_adapters, production_trace
 
 from .common import emit, timed
@@ -17,11 +20,14 @@ def run(fast: bool = False):
     sizes = (50, 100) if fast else (50, 100, 200)
     for n_adapters in sizes:
         adapters = make_adapters(n_adapters, seed=1)
+        nbytes = {a.adapter_id: a.nbytes for a in adapters}
         trace = production_trace(n_adapters, rps=20, duration=150, seed=2)
         for pol in POLICIES:
-            sim = ClusterSimulator(4, adapters, policy=pol, seed=3,
-                                   timeout=60, warmup=40)
-            res, us = timed(lambda: sim.run(copy.deepcopy(trace)),
+            cluster = LoRAServeCluster(
+                SimBackend(4, timeout=60, adapter_nbytes=nbytes),
+                adapters, policy=pol, network=NetworkModel(),
+                warmup=40, seed=3)
+            res, us = timed(lambda: cluster.run(copy.deepcopy(trace)),
                             repeat=1)
             rows.append(emit(
                 f"fig17/prod/{n_adapters}ad/{pol}", us,
@@ -30,8 +36,13 @@ def run(fast: bool = False):
                 f"max_adapters={res.max_adapters_per_server};"
                 f"adapter_GB={res.total_adapter_bytes / 1e9:.2f}"))
             if n_adapters == 100:
-                per = ";".join(f"s{i}={v:.2f}"
-                               for i, v in
-                               enumerate(res.per_server_p95_ttft))
+                by_server = {}
+                for r in res.results:
+                    if r.finished and r.arrival >= res.warmup \
+                            and r.ttft is not None:
+                        by_server.setdefault(r.server, []).append(r.ttft)
+                per = ";".join(
+                    f"s{sid}={percentile(ts, 95):.2f}"
+                    for sid, ts in sorted(by_server.items()))
                 rows.append(emit(f"fig18/per_server/{pol}", 0.0, per))
     return rows

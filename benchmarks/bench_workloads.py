@@ -1,10 +1,12 @@
 """Paper Fig 19/20 — the six derived traces (2 arrivals x 3 popularity)
-x 4 policies: P95 TTFT and mean TBT."""
+x 4 policies: P95 TTFT and mean TBT, served through the unified
+``LoRAServeCluster`` facade on the simulated backend."""
 from __future__ import annotations
 
 import copy
 
-from repro.cluster import ClusterSimulator
+from repro.cluster import NetworkModel
+from repro.serving import LoRAServeCluster, SimBackend
 from repro.traces import make_adapters, six_traces
 
 from .common import emit, timed
@@ -15,6 +17,7 @@ POLICIES = ["loraserve", "toppings", "slora-random", "slora-contiguous"]
 def run(fast: bool = False):
     rows = []
     adapters = make_adapters(25, seed=1)
+    nbytes = {a.adapter_id: a.nbytes for a in adapters}
     rps = 20
     traces = six_traces(adapters, rps=rps, duration=100 if fast else 150,
                         seed=2)
@@ -22,13 +25,16 @@ def run(fast: bool = False):
         if fast and tname.startswith("uniform-"):
             continue
         for pol in POLICIES:
-            sim = ClusterSimulator(4, adapters, policy=pol, seed=3,
-                                   timeout=60, warmup=40)
-            res, us = timed(lambda: sim.run(copy.deepcopy(trace)),
+            cluster = LoRAServeCluster(
+                SimBackend(4, timeout=60, adapter_nbytes=nbytes),
+                adapters, policy=pol, network=NetworkModel(),
+                warmup=40, seed=3)
+            res, us = timed(lambda: cluster.run(copy.deepcopy(trace)),
                             repeat=1)
             rows.append(emit(
                 f"fig19-20/{tname}/{pol}", us,
                 f"p95_ttft={res.p95_ttft():.3f}s;"
                 f"mean_tbt_ms={res.mean_tbt() * 1e3:.1f};"
+                f"rebalances={res.rebalances};"
                 f"timeout={res.timed_out}"))
     return rows

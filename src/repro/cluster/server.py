@@ -6,37 +6,11 @@ mechanism the paper analyzes (§III-A.5).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
+
+from repro.core.request import SimRequest  # noqa: F401  (re-export)
 
 from .costmodel import ServerModel
-
-
-@dataclasses.dataclass
-class SimRequest:
-    req_id: int
-    adapter_id: str
-    rank: int
-    prompt_len: int
-    output_len: int
-    arrival: float
-    # filled during simulation
-    ready: float = 0.0            # arrival + adapter fetch latency
-    prefill_done: float = -1.0
-    finish: float = -1.0
-    server: int = -1
-    decoded: int = 0
-    fetch_latency: float = 0.0
-
-    @property
-    def ttft(self) -> float:
-        return self.prefill_done - self.arrival
-
-    @property
-    def tbt(self) -> float:
-        if self.output_len <= 1 or self.finish < 0:
-            return 0.0
-        return (self.finish - self.prefill_done) / max(1, self.output_len - 1)
 
 
 class SimServer:

@@ -7,12 +7,15 @@ from .demand import DemandEstimator
 from .orchestrator import ClusterOrchestrator
 from .placement import assign_loraserve
 from .pool import DistributedAdapterPool
-from .routing import RoutingTable
+from .request import Phase, Request, ServeRequest, SimRequest
+from .routing import RoutingTable, UnknownAdapterError
 from .types import (AdapterInfo, Placement, PlacementContext,
                     PlacementStats, servers_to_adapters)
 
 __all__ = ["assign_loraserve", "AdapterInfo", "Placement",
            "PlacementContext", "PlacementStats", "DemandEstimator",
-           "RoutingTable", "DistributedAdapterPool", "ClusterOrchestrator",
+           "RoutingTable", "UnknownAdapterError",
+           "DistributedAdapterPool", "ClusterOrchestrator",
            "POLICIES", "LoraservePolicy", "RandomPolicy",
-           "ContiguousPolicy", "ToppingsPolicy", "servers_to_adapters"]
+           "ContiguousPolicy", "ToppingsPolicy", "servers_to_adapters",
+           "Phase", "Request", "ServeRequest", "SimRequest"]

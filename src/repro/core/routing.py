@@ -13,6 +13,20 @@ from typing import Dict, List, Optional, Tuple
 from .types import Placement
 
 
+class UnknownAdapterError(KeyError):
+    """Raised when routing is asked about an adapter with no placement
+    entry (never placed, or dropped from the routing table)."""
+
+    def __init__(self, adapter_id: str):
+        super().__init__(adapter_id)
+        self.adapter_id = adapter_id
+
+    def __str__(self) -> str:
+        return (f"adapter {self.adapter_id!r} has no entry in the routing "
+                f"table — it was never placed (or was dropped by a "
+                f"placement update)")
+
+
 class RoutingTable:
     def __init__(self, placement: Optional[Placement] = None, seed: int = 0):
         self._rng = random.Random(seed)
@@ -32,10 +46,16 @@ class RoutingTable:
         self._table = table
 
     def servers(self, adapter_id: str) -> List[Tuple[int, float]]:
-        return list(self._table[adapter_id])
+        try:
+            return list(self._table[adapter_id])
+        except KeyError:
+            raise UnknownAdapterError(adapter_id) from None
 
     def route(self, adapter_id: str, tokens: float = 0.0) -> int:
-        entry = self._table[adapter_id]
+        try:
+            entry = self._table[adapter_id]
+        except KeyError:
+            raise UnknownAdapterError(adapter_id) from None
         self.request_counts[adapter_id] = \
             self.request_counts.get(adapter_id, 0) + 1
         self.token_counts[adapter_id] = \

@@ -1,10 +1,17 @@
-"""Serving launcher: a miniature LORASERVE cluster of real JAX engines.
+"""Serving launcher: a miniature LORASERVE cluster of real JAX engines
+driven through the unified ``LoRAServeCluster`` facade.
 
-Each "server" is a ServingEngine over the same (reduced) base model with
-its own local adapter subset; the ClusterOrchestrator routes requests via
-the paper's placement + phi-routing + distributed-pool machinery. This is
-the end-to-end driver deliverable (real model execution on CPU); the
-full-scale evaluation uses the calibrated simulator (benchmarks/).
+Each "server" is a placement-aware ``ServingEngine`` over the same
+(reduced) base model whose LoRA bank holds *only its placed adapter
+subset* (a server hosting ranks {8, 16} pays a 16-wide bank, not the
+global max). The facade owns the paper's control plane — placement +
+phi-routing + distributed pool + demand estimation — and applies
+``end_of_timestep`` rebalances while requests are in flight: arrivals
+are spread over wall-clock time with drifting adapter popularity, so at
+least one mid-run rebalance re-places adapters and re-seeds routing
+before the trace drains. This is the end-to-end driver deliverable
+(real model execution on CPU); the full-scale evaluation uses the
+calibrated simulator (benchmarks/).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch llama-7b-paper \
@@ -14,16 +21,37 @@ from __future__ import annotations
 
 import argparse
 import random
-import time
 
 import jax
 
-from repro.cluster import NetworkModel, ServerModel, \
-    profile_operating_points
+from repro.cluster import NetworkModel
 from repro.configs import get_smoke_config
-from repro.core import AdapterInfo, ClusterOrchestrator
+from repro.core import AdapterInfo, ServeRequest
 from repro.models import model as M
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineBackend, LoRAServeCluster
+
+
+def build_trace(adapters, cfg, n_requests: int, prompt_len: int,
+                max_new: int, duration: float, seed: int):
+    """Arrivals spread over `duration` seconds with drifting popularity:
+    early traffic favors low-rank adapters, late traffic high-rank —
+    the workload shift that makes the dynamic policy re-place."""
+    rng = random.Random(seed)
+    by_rank = sorted(adapters, key=lambda a: a.rank)
+    trace = []
+    for i in range(n_requests):
+        progress = i / max(1, n_requests - 1)
+        # weight drifts from head (low ranks) to tail (high ranks)
+        w = [(1.0 - progress) * (len(by_rank) - j) + progress * (j + 1)
+             for j in range(len(by_rank))]
+        a = rng.choices(by_rank, weights=w)[0]
+        prompt = [rng.randrange(1, cfg.vocab_size)
+                  for _ in range(prompt_len)]
+        trace.append(ServeRequest(
+            req_id=i, adapter_id=a.adapter_id, rank=a.rank,
+            prompt_len=prompt_len, output_len=max_new, prompt=prompt,
+            arrival=i * duration / max(1, n_requests)))
+    return trace
 
 
 def main():
@@ -37,10 +65,12 @@ def main():
                              "slora-contiguous", "toppings"])
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--duration", type=float, default=6.0,
+                    help="seconds the trace arrivals span")
+    ap.add_argument("--rebalance-period", type=float, default=1.5)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    rng = random.Random(args.seed)
     cfg = get_smoke_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
 
@@ -48,42 +78,31 @@ def main():
     adapters = [AdapterInfo(f"ad{i}-r{ranks[i % 5]}", ranks[i % 5],
                             nbytes=ranks[i % 5] * 2_000_000)
                 for i in range(args.adapters)]
-    adapter_ranks = {a.adapter_id: a.rank for a in adapters}
 
-    ops = profile_operating_points(ServerModel(),
-                                   {a.rank for a in adapters})
-    orch = ClusterOrchestrator(args.servers, adapters, ops,
-                               policy=args.policy, network=NetworkModel(),
-                               seed=args.seed)
+    backend = EngineBackend(cfg, params, args.servers, max_batch=4,
+                            max_len=args.prompt_len + args.max_new + 8,
+                            seed=args.seed)
+    cluster = LoRAServeCluster(
+        backend, adapters, policy=args.policy, network=NetworkModel(),
+        rebalance_period=args.rebalance_period, seed=args.seed)
+    trace = build_trace(adapters, cfg, args.requests, args.prompt_len,
+                        args.max_new, args.duration, args.seed)
+    report = cluster.run(trace)
 
-    engines = [ServingEngine(cfg, params, adapter_ranks, max_batch=4,
-                             max_len=args.prompt_len + args.max_new + 8)
-               for _ in range(args.servers)]
-
-    t0 = time.monotonic()
-    per_server = [0] * args.servers
-    fetch_total = 0.0
-    for i in range(args.requests):
-        aid = rng.choice(adapters).adapter_id
-        sid, fetch_lat = orch.route(aid, tokens=args.prompt_len +
-                                    args.max_new)
-        fetch_total += fetch_lat
-        per_server[sid] += 1
-        prompt = [rng.randrange(1, cfg.vocab_size) for _ in
-                  range(args.prompt_len)]
-        engines[sid].submit(Request(req_id=i, adapter_id=aid,
-                                    prompt=prompt,
-                                    max_new_tokens=args.max_new,
-                                    arrival=time.monotonic()))
-    for sid, eng in enumerate(engines):
-        summ = eng.run_until_drained()
-        print(f"server {sid}: requests={per_server[sid]} "
-              f"p95_ttft={summ['p95_ttft']:.3f}s "
-              f"mean_tbt={summ['mean_tbt']*1e3:.1f}ms")
-    orch.end_of_timestep(time.monotonic() - t0)
-    print(f"policy={args.policy} total_fetch_latency={fetch_total*1e3:.1f}ms "
-          f"pool_fetches={orch.pool.fetches} "
-          f"max_adapters/server={orch.pool.max_adapters_per_server()}")
+    for sid in range(args.servers):
+        mem = report.memory_profile[sid]
+        print(f"server {sid}: requests={report.per_server_counts[sid]} "
+              f"bank_adapters={mem['n_adapters']} "
+              f"bank_max_rank={mem['max_rank']}")
+    s = report.summary
+    print(f"policy={args.policy} finished={report.completed()}"
+          f"/{len(trace)} p95_ttft={s['p95_ttft']:.3f}s "
+          f"mean_tbt={s['mean_tbt'] * 1e3:.1f}ms "
+          f"fetch_latency(mean)={s['mean_fetch_latency'] * 1e3:.1f}ms")
+    print(f"rebalances={report.rebalances} "
+          f"placement_changed={report.placement_changed()} "
+          f"pool_fetches={report.fetches} "
+          f"max_adapters/server={report.max_adapters_per_server}")
     print("cluster drained OK")
 
 

@@ -1,6 +1,7 @@
-from .adapter import (Adapter, init_adapter, init_bank, merge_adapter,
-                      bank_nbytes)
+from .adapter import (Adapter, adapter_key, init_adapter, init_bank,
+                      init_bank_from, merge_adapter, bank_nbytes)
 from .batched import lora_delta, make_lora_cb
 
-__all__ = ["Adapter", "init_adapter", "init_bank", "merge_adapter",
-           "bank_nbytes", "lora_delta", "make_lora_cb"]
+__all__ = ["Adapter", "adapter_key", "init_adapter", "init_bank",
+           "init_bank_from", "merge_adapter", "bank_nbytes", "lora_delta",
+           "make_lora_cb"]

@@ -10,6 +10,7 @@ participate in the matmuls).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Tuple
 
 import jax
@@ -92,6 +93,33 @@ def init_bank(cfg, ranks, key, n_layers=None, dtype=jnp.float32):
         # pad rank dim to max_r
         a = jax.tree.map(lambda t: _pad_rank(t, max_r), a)
         singles.append(a)
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *singles)
+
+
+def adapter_key(base_key, adapter_id: str):
+    """Deterministic per-adapter PRNG key: the same adapter id always
+    yields the same weights, no matter which bank subset it lands in."""
+    return jax.random.fold_in(base_key,
+                              zlib.crc32(adapter_id.encode()) & 0x7FFFFFFF)
+
+
+def init_bank_from(cfg, adapter_ranks: Dict[str, int], key, n_layers=None,
+                   dtype=jnp.float32):
+    """Bank over ``sorted(adapter_ranks)``, padded to the *subset's* max
+    rank (not a global one): a server hosting only ranks {8, 16} pays a
+    16-wide bank. Weights are keyed per adapter id via ``adapter_key``,
+    so rebuilding a bank for a different hosted subset (after a
+    placement change) reproduces identical weights for every adapter it
+    keeps."""
+    ids = sorted(adapter_ranks)
+    if not ids:
+        raise ValueError("init_bank_from needs at least one adapter")
+    max_r = max(adapter_ranks.values())
+    singles = []
+    for aid in ids:
+        a = init_adapter(cfg, adapter_ranks[aid], adapter_key(key, aid),
+                         n_layers=n_layers, dtype=dtype)
+        singles.append(jax.tree.map(lambda t: _pad_rank(t, max_r), a))
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *singles)
 
 

@@ -1,5 +1,13 @@
+from .backend import EngineBackend, ServingBackend, SimBackend
+from .cluster import ClusterReport, LoRAServeCluster, ServeResult
 from .engine import ServingEngine
 from .metrics import MetricsCollector, percentile
-from .request import Phase, Request
+from .request import Phase, Request, ServeRequest
 from .scheduler import replay
 from .paging import OutOfPages, UnifiedPagePool
+
+__all__ = ["EngineBackend", "ServingBackend", "SimBackend",
+           "ClusterReport", "LoRAServeCluster", "ServeResult",
+           "ServingEngine", "MetricsCollector", "percentile",
+           "Phase", "Request", "ServeRequest", "replay",
+           "OutOfPages", "UnifiedPagePool"]

@@ -1,0 +1,295 @@
+"""One backend protocol for both execution substrates.
+
+``ServingBackend`` is the contract ``LoRAServeCluster`` drives: submit a
+request to a server, advance all servers on a shared clock, drain
+completion events, and introspect per-server load and adapter memory.
+Two implementations:
+
+* ``SimBackend`` — wraps the discrete-event ``SimServer`` pool and the
+  calibrated ``ServerModel`` cost model; time is virtual and the facade
+  jumps the clock to ``next_event_time``.
+* ``EngineBackend`` — wraps real-JAX ``ServingEngine`` instances, one
+  per server, each built *lazily from the adapter subset placed on it*
+  (so a server hosting ranks {8, 16} pays a 16-wide bank, not the global
+  max). Time is wall-clock seconds since run start.
+
+Both speak the unified ``ServeRequest`` lifecycle type and honor
+``load_adapters`` / ``evict_adapter`` so the control loop can re-place
+adapters while requests are in flight.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import Dict, List, Optional, Protocol, runtime_checkable
+
+from repro.core.request import ServeRequest
+
+
+@runtime_checkable
+class ServingBackend(Protocol):
+    """What a cluster execution substrate must provide."""
+
+    n_servers: int
+    realtime: bool    # True: wall clock (poll); False: virtual (jump)
+
+    def start(self) -> None:
+        """Called once when a run begins (anchors realtime clocks)."""
+        ...
+
+    def submit(self, server_id: int, req: ServeRequest,
+               now: float) -> None: ...
+
+    def step(self, now: float) -> None:
+        """Advance every server that has runnable work at ``now``."""
+        ...
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        """Earliest future time anything can happen (virtual backends);
+        None when idle or realtime."""
+        ...
+
+    def wall_now(self) -> float:
+        """Current shared-clock time (realtime backends only)."""
+        ...
+
+    def drain_completed(self) -> List[ServeRequest]: ...
+
+    def drain_timed_out(self) -> List[ServeRequest]: ...
+
+    def pending(self) -> int: ...
+
+    def server_load(self, server_id: int, now: float) -> float: ...
+
+    def load_adapters(self, server_id: int,
+                      adapter_ranks: Dict[str, int]) -> None: ...
+
+    def evict_adapter(self, server_id: int, adapter_id: str) -> bool: ...
+
+    def hosted_adapters(self, server_id: int) -> Dict[str, int]: ...
+
+    def memory_profile(self) -> List[Dict[str, float]]:
+        """Per-server {n_adapters, max_rank, adapter_bytes}."""
+        ...
+
+
+# ----------------------------------------------------------------------
+class SimBackend:
+    """Discrete-event substrate over ``SimServer`` + ``ServerModel``."""
+
+    realtime = False
+
+    def __init__(self, n_servers: int, server_model=None,
+                 timeout: float = 120.0,
+                 adapter_nbytes: Optional[Dict[str, int]] = None):
+        from repro.cluster.costmodel import ServerModel
+        from repro.cluster.server import SimServer
+        self.n_servers = n_servers
+        self.model = server_model or ServerModel()
+        self.servers = [SimServer(i, self.model) for i in range(n_servers)]
+        self.timeout = timeout
+        self._nbytes = adapter_nbytes or {}
+        self._hosted: List[Dict[str, int]] = [{} for _ in range(n_servers)]
+        self._inflight: List[ServeRequest] = []
+        self._completed: List[ServeRequest] = []
+        self._timed_out: List[ServeRequest] = []
+
+    def start(self) -> None:
+        pass
+
+    def submit(self, server_id: int, req: ServeRequest,
+               now: float) -> None:
+        req.server = server_id
+        req.ready = now + req.fetch_latency
+        self.servers[server_id].enqueue(req)
+        self._inflight.append(req)
+
+    def step(self, now: float) -> None:
+        for s in self.servers:
+            for r in list(s.waiting):
+                if now - r.arrival > self.timeout:
+                    s.waiting.remove(r)
+                    self._inflight.remove(r)
+                    self._timed_out.append(r)
+            if s.busy_until <= now + 1e-12 and s.has_work(now):
+                s.step(now)
+        still = []
+        for r in self._inflight:
+            (self._completed if r.finish >= 0 else still).append(r)
+        self._inflight = still
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        ts = [t for t in (s.next_event_time(now) for s in self.servers)
+              if t is not None]
+        return min(ts) if ts else None
+
+    def wall_now(self) -> float:
+        raise RuntimeError("SimBackend has no wall clock; virtual time "
+                           "is driven by the cluster facade")
+
+    def drain_completed(self) -> List[ServeRequest]:
+        done, self._completed = self._completed, []
+        return done
+
+    def drain_timed_out(self) -> List[ServeRequest]:
+        out, self._timed_out = self._timed_out, []
+        return out
+
+    def pending(self) -> int:
+        return len(self._inflight)
+
+    def server_load(self, server_id: int, now: float) -> float:
+        return self.servers[server_id].estimated_work(now)
+
+    def load_adapters(self, server_id: int,
+                      adapter_ranks: Dict[str, int]) -> None:
+        self._hosted[server_id].update(adapter_ranks)
+
+    def evict_adapter(self, server_id: int, adapter_id: str) -> bool:
+        # refuse while the adapter still has requests on this server
+        if any(r.adapter_id == adapter_id and r.server == server_id
+               for r in self._inflight):
+            return False
+        return self._hosted[server_id].pop(adapter_id, None) is not None
+
+    def hosted_adapters(self, server_id: int) -> Dict[str, int]:
+        return dict(self._hosted[server_id])
+
+    def memory_profile(self) -> List[Dict[str, float]]:
+        out = []
+        for hosted in self._hosted:
+            out.append({
+                "n_adapters": len(hosted),
+                "max_rank": max(hosted.values()) if hosted else 0,
+                "adapter_bytes": sum(self._nbytes.get(a, 0)
+                                     for a in hosted),
+            })
+        return out
+
+
+# ----------------------------------------------------------------------
+class EngineBackend:
+    """Real-JAX substrate: one placement-aware ``ServingEngine`` per
+    server, created lazily with the adapter subset first loaded onto it.
+
+    The shared clock is wall-clock seconds since ``start()``; request
+    arrivals are interpreted in that same relative domain. Simulated
+    adapter-fetch latency from the pool is recorded on the request (it
+    cannot be injected into real execution time).
+    """
+
+    realtime = True
+
+    def __init__(self, cfg, params, n_servers: int, *,
+                 max_batch: int = 4, max_len: int = 64, seed: int = 0,
+                 timeout: float = 120.0, page_pool_factory=None):
+        from .engine import ServingEngine
+        self._engine_cls = ServingEngine
+        self.cfg = cfg
+        self.params = params
+        self.n_servers = n_servers
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.seed = seed
+        self.timeout = timeout
+        self._page_pool_factory = page_pool_factory
+        self.engines: List[Optional[object]] = [None] * n_servers
+        self._t0 = time.monotonic()
+        self._timed_out: List[ServeRequest] = []
+
+    # -- clock ----------------------------------------------------------
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def wall_now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def next_event_time(self, now: float) -> Optional[float]:
+        return None
+
+    # -- request path ---------------------------------------------------
+    def submit(self, server_id: int, req: ServeRequest,
+               now: float) -> None:
+        eng = self.engines[server_id]
+        if eng is None:
+            raise RuntimeError(f"server {server_id} has no adapters "
+                               f"loaded; call load_adapters first")
+        req.server = server_id
+        req.ready = now + req.fetch_latency
+        if req.prompt is None:
+            # length-only (simulator-style) request: synthesize a
+            # deterministic prompt so sim traces replay on real engines
+            rng = random.Random(req.req_id)
+            plen = max(1, min(req.prompt_len,
+                              self.max_len - req.output_len - 1))
+            req.prompt = [rng.randrange(1, self.cfg.vocab_size)
+                          for _ in range(plen)]
+        eng.submit(req)
+
+    def step(self, now: float) -> None:
+        for eng in self.engines:
+            if eng is None:
+                continue
+            # drop queued (not-yet-admitted) requests past the timeout,
+            # mirroring SimBackend's waiting-queue drops
+            for r in list(eng.queue):
+                if now - r.arrival > self.timeout:
+                    eng.queue.remove(r)
+                    self._timed_out.append(r)
+            if eng.queue or eng.active:
+                eng.step()
+
+    def drain_completed(self) -> List[ServeRequest]:
+        out: List[ServeRequest] = []
+        for eng in self.engines:
+            if eng is not None:
+                out.extend(eng.drain_completed())
+        return out
+
+    def drain_timed_out(self) -> List[ServeRequest]:
+        out, self._timed_out = self._timed_out, []
+        return out
+
+    def pending(self) -> int:
+        return sum(len(e.queue) + e.active
+                   for e in self.engines if e is not None)
+
+    def server_load(self, server_id: int, now: float) -> float:
+        eng = self.engines[server_id]
+        return 0.0 if eng is None else float(len(eng.queue) + eng.active)
+
+    # -- placement path -------------------------------------------------
+    def load_adapters(self, server_id: int,
+                      adapter_ranks: Dict[str, int]) -> None:
+        if not adapter_ranks:
+            return
+        if self.engines[server_id] is None:
+            pool = (self._page_pool_factory()
+                    if self._page_pool_factory else None)
+            self.engines[server_id] = self._engine_cls(
+                self.cfg, self.params, dict(adapter_ranks),
+                max_batch=self.max_batch, max_len=self.max_len,
+                seed=self.seed, page_pool=pool, clock=self.wall_now)
+        else:
+            self.engines[server_id].load_adapters(adapter_ranks)
+
+    def evict_adapter(self, server_id: int, adapter_id: str) -> bool:
+        eng = self.engines[server_id]
+        return False if eng is None else eng.evict_adapter(adapter_id)
+
+    def hosted_adapters(self, server_id: int) -> Dict[str, int]:
+        eng = self.engines[server_id]
+        return {} if eng is None else dict(eng.adapter_ranks)
+
+    def memory_profile(self) -> List[Dict[str, float]]:
+        from repro.lora.adapter import bank_nbytes
+        out = []
+        for eng in self.engines:
+            if eng is None:
+                out.append({"n_adapters": 0, "max_rank": 0,
+                            "adapter_bytes": 0})
+            else:
+                out.append({"n_adapters": len(eng.adapter_ids),
+                            "max_rank": eng.max_rank,
+                            "adapter_bytes": bank_nbytes(eng.bank)})
+        return out

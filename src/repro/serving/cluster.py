@@ -1,0 +1,265 @@
+"""LoRAServeCluster: one serving facade over either execution substrate.
+
+Owns the paper's control plane (``ClusterOrchestrator``: placement
+policy, phi-weighted routing table, distributed adapter pool, demand
+estimator) and drives a ``ServingBackend`` (simulated or real-JAX) on a
+shared clock:
+
+* arrivals are phi-routed (Fig 11 steps 1-2) and the adapter is pulled
+  through the distributed pool + the backend's ``load_adapters`` before
+  submission (steps 3-4);
+* every ``rebalance_period`` seconds the demand window closes and
+  ``end_of_timestep`` re-places adapters (steps 6-7) *while requests are
+  in flight*: the routing table and pool are re-seeded mid-run, idle
+  adapters are evicted from server banks, and subsequent requests follow
+  the updated phi;
+* completions stream back as ``ServeResult`` records through one
+  ``MetricsCollector`` regardless of backend.
+
+This is the unified serving API the launcher, examples, and benchmarks
+build on.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core import ClusterOrchestrator
+from repro.core.request import ServeRequest
+from repro.core.types import AdapterInfo, Placement, servers_to_adapters
+
+from .backend import ServingBackend
+from .metrics import MetricsCollector, percentile
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """Per-request outcome, identical for sim and real backends."""
+    req_id: int
+    adapter_id: str
+    rank: int
+    server: int
+    arrival: float
+    finished: bool
+    ttft: Optional[float]
+    tbt: Optional[float]
+    fetch_latency: float
+    n_output: int
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    results: List[ServeResult]
+    summary: dict
+    rebalances: int                    # control-loop timesteps fired
+    placements: List[Placement]        # history; >1 entry => re-placed
+    per_server_counts: List[int]
+    timed_out: int
+    fetches: int
+    fetch_bytes: int
+    max_adapters_per_server: int
+    total_adapter_bytes: int
+    memory_profile: List[dict]
+    warmup: float = 0.0
+
+    def _eligible(self) -> List[ServeResult]:
+        return [r for r in self.results
+                if r.finished and r.arrival >= self.warmup]
+
+    def _ttfts(self) -> List[float]:
+        return [r.ttft for r in self._eligible() if r.ttft is not None]
+
+    def p50_ttft(self) -> float:
+        t = self._ttfts()
+        return percentile(t, 50) if t else float("inf")
+
+    def p95_ttft(self) -> float:
+        t = self._ttfts()
+        return percentile(t, 95) if t else float("inf")
+
+    def mean_tbt(self) -> float:
+        ts = [r.tbt for r in self._eligible() if r.tbt and r.tbt > 0]
+        return sum(ts) / len(ts) if ts else 0.0
+
+    def p95_tbt(self) -> float:
+        ts = [r.tbt for r in self._eligible() if r.tbt and r.tbt > 0]
+        return percentile(ts, 95) if ts else 0.0
+
+    def completed(self) -> int:
+        return sum(1 for r in self.results if r.finished)
+
+    def placement_changed(self) -> bool:
+        return len(self.placements) > 1
+
+    def meets_slo(self, slo_ttft: float) -> bool:
+        return self.timed_out == 0 and self.p95_ttft() <= slo_ttft
+
+
+class LoRAServeCluster:
+    """One-shot cluster run: construct, ``run(trace)``, read the report."""
+
+    def __init__(self, backend: ServingBackend,
+                 adapters: List[AdapterInfo], *,
+                 policy: str = "loraserve", network=None,
+                 rebalance_period: float = 15.0, warmup: float = 0.0,
+                 seed: int = 0, operating_points=None, server_model=None):
+        if operating_points is None:
+            from repro.cluster.costmodel import (ServerModel,
+                                                 profile_operating_points)
+            operating_points = profile_operating_points(
+                server_model or ServerModel(), {a.rank for a in adapters})
+        self.backend = backend
+        self.adapters = adapters
+        self.meta = {a.adapter_id: a for a in adapters}
+        self.rebalance_period = rebalance_period
+        self.warmup = warmup
+        self.orch = ClusterOrchestrator(
+            backend.n_servers, adapters, operating_points, policy=policy,
+            network=network, seed=seed)
+        self.metrics = MetricsCollector()
+        self.placements: List[Placement] = [
+            copy.deepcopy(self.orch.placement)]
+        self.rebalances = 0
+        self.per_server_counts = [0] * backend.n_servers
+        self.routed: Dict[int, int] = {}       # req_id -> server
+        self._finished: List[ServeRequest] = []
+        self._timed_out: List[ServeRequest] = []
+        self._ran = False
+        self._seed_backend()
+        # running peaks across rebalances (the pool GCs lazily, so the
+        # end-of-run state understates what a server actually held)
+        self._max_adapters = self.orch.pool.max_adapters_per_server()
+        self._total_bytes = self.orch.pool.total_bytes()
+
+    # -- placement -> backend sync --------------------------------------
+    def _seed_backend(self) -> None:
+        for sid, aids in servers_to_adapters(self.orch.placement).items():
+            self.backend.load_adapters(
+                sid, {aid: self.meta[aid].rank for aid in aids})
+
+    # -- request path (Fig 11 steps 1-4) --------------------------------
+    def _dispatch(self, req: ServeRequest, now: float) -> None:
+        aid = req.adapter_id
+        if req.rank == 0 and aid in self.meta:
+            req.rank = self.meta[aid].rank
+        if self.orch.policy.replicate_all:
+            sid = min(range(self.backend.n_servers),
+                      key=lambda i: self.backend.server_load(i, now))
+            fetch = 0.0
+        else:
+            sid, fetch = self.orch.route(
+                aid, tokens=req.prompt_len + req.output_len)
+        req.fetch_latency = fetch
+        self.backend.load_adapters(sid, {aid: req.rank})
+        self.backend.submit(sid, req, now)
+        self.per_server_counts[sid] += 1
+        self.routed[req.req_id] = sid
+
+    # -- control path (Fig 11 steps 6-7), mid-flight --------------------
+    def _rebalance(self, period: float) -> None:
+        prev = self.placements[-1]
+        new = self.orch.end_of_timestep(max(period, 1e-9))
+        self.rebalances += 1
+        if new != prev:
+            self.placements.append(copy.deepcopy(new))
+        # sync backend banks to the placement at *every* timestep, not
+        # only when it changed: an eviction refused while the adapter
+        # was in flight must be retried once that traffic drains
+        want = servers_to_adapters(new)
+        for sid in range(self.backend.n_servers):
+            wanted = set(want.get(sid, []))
+            for aid in list(self.backend.hosted_adapters(sid)):
+                if aid not in wanted:
+                    self.backend.evict_adapter(sid, aid)
+        # newly placed adapters load lazily on their first routed request
+        self._max_adapters = max(self._max_adapters,
+                                 self.orch.pool.max_adapters_per_server())
+        self._total_bytes = max(self._total_bytes,
+                                self.orch.pool.total_bytes())
+
+    # -- run loop --------------------------------------------------------
+    def run(self, trace: List[ServeRequest], *,
+            max_steps: int = 10_000_000) -> ClusterReport:
+        if self._ran:
+            raise RuntimeError("LoRAServeCluster is one-shot; build a "
+                               "fresh instance per run")
+        self._ran = True
+        trace = sorted(trace, key=lambda r: r.arrival)
+        n = len(trace)
+        dynamic = self.orch.policy.dynamic
+        self.backend.start()
+        now = 0.0
+        last_reb = 0.0
+        next_reb = self.rebalance_period if dynamic else float("inf")
+        i = 0
+        for _ in range(max_steps):
+            while i < n and trace[i].arrival <= now + 1e-12:
+                self._dispatch(trace[i], now)
+                i += 1
+            if dynamic and now + 1e-12 >= next_reb:
+                self._rebalance(now - last_reb)
+                last_reb = now
+                next_reb = now + self.rebalance_period
+            self.backend.step(now)
+            for req in self.backend.drain_completed():
+                self.metrics.record(req)
+                self._finished.append(req)
+            self._timed_out.extend(self.backend.drain_timed_out())
+            if i >= n and self.backend.pending() == 0:
+                break
+            if self.backend.realtime:
+                if self.backend.pending() == 0 and i < n:
+                    time.sleep(max(0.0, min(
+                        trace[i].arrival - self.backend.wall_now(), 0.01)))
+                now = self.backend.wall_now()
+            else:
+                cands = []
+                if i < n:
+                    cands.append(trace[i].arrival)
+                t = self.backend.next_event_time(now)
+                if t is not None:
+                    cands.append(t)
+                if dynamic and (i < n or self.backend.pending()):
+                    cands.append(next_reb)
+                if not cands:
+                    break           # nothing can ever happen again
+                now = max(now, min(cands))
+        return self._report(trace)
+
+    def _report(self, trace: List[ServeRequest]) -> ClusterReport:
+        done_ids = {id(r) for r in self._finished}
+        results = []
+        for r in trace:
+            finished = id(r) in done_ids
+            results.append(ServeResult(
+                req_id=r.req_id, adapter_id=r.adapter_id, rank=r.rank,
+                server=r.server, arrival=r.arrival, finished=finished,
+                ttft=r.ttft if finished else None,
+                tbt=r.tbt if finished else None,
+                fetch_latency=r.fetch_latency,
+                n_output=len(r.output) if r.output else r.decoded))
+        pool = self.orch.pool
+        if self.orch.policy.replicate_all:
+            max_adapters = len(self.adapters)
+            total_bytes = sum(a.nbytes for a in self.adapters) \
+                * self.backend.n_servers
+        else:
+            max_adapters = max(self._max_adapters,
+                               pool.max_adapters_per_server())
+            total_bytes = max(self._total_bytes, pool.total_bytes())
+        return ClusterReport(
+            results=results,
+            summary=self.metrics.summary(),
+            rebalances=self.rebalances,
+            placements=self.placements,
+            per_server_counts=list(self.per_server_counts),
+            timed_out=len(self._timed_out),
+            fetches=pool.fetches,
+            fetch_bytes=pool.fetch_bytes,
+            max_adapters_per_server=max_adapters,
+            total_adapter_bytes=total_bytes,
+            memory_profile=self.backend.memory_profile(),
+            warmup=self.warmup,
+        )

@@ -7,49 +7,62 @@ Prefill runs per-request (B=1, exact length — no padding pollution for
 SSM state); decode runs one jitted step for the whole slot batch. Each
 slot row carries its own cache position; free slots drop their writes
 (out-of-bounds scatter semantics).
+
+The engine is *placement-aware*: its bank holds only the adapters the
+orchestrator placed (or fetched) onto this server, padded to that
+subset's max rank — not the global one. ``load_adapters`` /
+``evict_adapter`` rebuild the bank mid-flight, remapping the adapter
+indices of co-batched slots, so a cluster rebalance can reshape a
+server's bank while requests are decoding.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.lora.adapter import init_bank
+from repro.lora.adapter import init_bank_from
 from repro.models import model as M
 
 from .metrics import MetricsCollector
 from .paging import UnifiedPagePool
-from .request import Phase, Request
+from .request import Phase, ServeRequest
+
+Request = ServeRequest
 
 
 class ServingEngine:
     def __init__(self, cfg, params, adapter_ranks: Dict[str, int],
                  *, max_batch: int = 8, max_len: int = 512,
                  seed: int = 0, scaling: float = 1.0,
-                 page_pool: Optional[UnifiedPagePool] = None):
+                 page_pool: Optional[UnifiedPagePool] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
         self.page_pool = page_pool
         self.params = params
-        self.adapter_ids = sorted(adapter_ranks)
-        self.ranks = [adapter_ranks[a] for a in self.adapter_ids]
-        self.max_rank = max(self.ranks)          # bank padding = max rank
         self.max_batch = max_batch
         self.max_len = max_len
-        n_layers = 1 if cfg.family == "hybrid" else cfg.n_layers
-        self.bank = init_bank(cfg, self.ranks, jax.random.PRNGKey(seed),
-                              n_layers=n_layers)
+        self._clock = clock
+        self._bank_key = jax.random.PRNGKey(seed)
+        self.slots: List[Optional[ServeRequest]] = [None] * max_batch
+        self.slot_adapter = jnp.zeros((max_batch,), jnp.int32)
+        self.last_token = jnp.zeros((max_batch,), jnp.int32)
+        self.metrics = MetricsCollector()
+        self.queue: List[ServeRequest] = []
+        self.completed: List[ServeRequest] = []
+        self._iter = 0
+        self.bank_rebuilds = 0
+
+        self.adapter_ranks: Dict[str, int] = {}
+        self._rebuild_bank(dict(adapter_ranks))
+        self.bank_rebuilds = 0          # the initial build doesn't count
+
         enc_len = (cfg.encoder.n_frames if cfg.encoder
                    else (cfg.n_frontend_tokens or None))
         self.cache = M.init_cache(cfg, max_batch, max_len,
                                   jnp.float32, enc_len=enc_len)
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.slot_adapter = jnp.zeros((max_batch,), jnp.int32)
-        self.last_token = jnp.zeros((max_batch,), jnp.int32)
-        self.metrics = MetricsCollector()
-        self.queue: List[Request] = []
-        self._iter = 0
 
         cfgc = cfg
 
@@ -72,15 +85,63 @@ class ServingEngine:
         self._merge = jax.jit(_merge, donate_argnums=(0,))
         self._prefill_cache = {}
 
+    # -- placement-aware bank management --------------------------------
+    def _rebuild_bank(self, adapter_ranks: Dict[str, int]) -> None:
+        self.adapter_ranks = adapter_ranks
+        self.adapter_ids = sorted(adapter_ranks)
+        self.ranks = [adapter_ranks[a] for a in self.adapter_ids]
+        self.max_rank = max(self.ranks)      # bank padding = subset max
+        n_layers = 1 if self.cfg.family == "hybrid" else self.cfg.n_layers
+        self.bank = init_bank_from(self.cfg, adapter_ranks, self._bank_key,
+                                   n_layers=n_layers)
+        self.bank_rebuilds += 1
+        # remap adapter indices of co-batched slots to the new bank layout
+        idx = [self.adapter_ids.index(r.adapter_id) if r is not None else 0
+               for r in self.slots]
+        self.slot_adapter = jnp.asarray(idx, jnp.int32)
+
+    def load_adapters(self, adapter_ranks: Dict[str, int]) -> bool:
+        """Add adapters to this server's bank (placement update or pool
+        fetch). Returns True if the bank was rebuilt."""
+        new = {aid: r for aid, r in adapter_ranks.items()
+               if aid not in self.adapter_ranks}
+        if not new:
+            return False
+        self._rebuild_bank({**self.adapter_ranks, **new})
+        return True
+
+    def evict_adapter(self, adapter_id: str) -> bool:
+        """Drop an adapter from the bank. Refuses (returns False) while
+        the adapter still has queued or co-batched requests, or if it is
+        the server's last adapter."""
+        if adapter_id not in self.adapter_ranks:
+            return False
+        if len(self.adapter_ranks) == 1:
+            return False
+        if any(r is not None and r.adapter_id == adapter_id
+               for r in self.slots):
+            return False
+        if any(q.adapter_id == adapter_id for q in self.queue):
+            return False
+        self._rebuild_bank({aid: r for aid, r in self.adapter_ranks.items()
+                            if aid != adapter_id})
+        return True
+
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: ServeRequest) -> None:
+        if req.adapter_id not in self.adapter_ranks:
+            raise KeyError(f"adapter {req.adapter_id!r} is not loaded on "
+                           f"this server (hosted: {self.adapter_ids})")
         self.queue.append(req)
 
     def _adapter_index(self, adapter_id: str) -> int:
         return self.adapter_ids.index(adapter_id)
 
     def _prefill_fn(self, length: int):
-        if length not in self._prefill_cache:
+        # keyed by (prompt length, bank max rank): bank reshapes after a
+        # rebalance retrigger tracing for that shape only
+        key = (length, self.max_rank, len(self.adapter_ids))
+        if key not in self._prefill_cache:
             cfg = self.cfg
 
             def _prefill(params, tokens, bank, idx, frontend=None):
@@ -89,8 +150,8 @@ class ServingEngine:
                                  cache_len=self.max_len,
                                  cache_dtype=jnp.float32)
 
-            self._prefill_cache[length] = jax.jit(_prefill)
-        return self._prefill_cache[length]
+            self._prefill_cache[key] = jax.jit(_prefill)
+        return self._prefill_cache[key]
 
     def _admit(self, now: float) -> None:
         for slot in range(self.max_batch):
@@ -134,7 +195,9 @@ class ServingEngine:
             req.phase = Phase.DECODE
             req.slot = slot
             req.output.append(first)
-            req.t_first_token = time.monotonic()
+            t = self._clock()
+            req.t_first_token = t
+            req.prefill_done = t
             self.slots[slot] = req
 
     def _decode_once(self) -> None:
@@ -145,7 +208,7 @@ class ServingEngine:
             self.slot_adapter)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.last_token = nxt
-        now = time.monotonic()
+        now = self._clock()
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -157,7 +220,9 @@ class ServingEngine:
             if done or len(req.prompt) + len(req.output) >= self.max_len:
                 req.phase = Phase.DONE
                 req.t_finish = now
+                req.finish = now
                 self.metrics.record(req)
+                self.completed.append(req)
                 self.slots[slot] = None
                 if self.page_pool is not None:
                     self.page_pool.free_kv(f"req{req.req_id}")
@@ -169,8 +234,12 @@ class ServingEngine:
 
     def step(self) -> None:
         """One engine iteration: admit then decode (prefill-prioritized)."""
-        self._admit(time.monotonic())
+        self._admit(self._clock())
         self._decode_once()
+
+    def drain_completed(self) -> List[ServeRequest]:
+        done, self.completed = self.completed, []
+        return done
 
     def run_until_drained(self, max_iters: int = 100_000) -> dict:
         it = 0

@@ -1,7 +1,8 @@
-"""Latency metrics: TTFT / TBT percentiles over finished requests."""
+"""Latency metrics: TTFT / TBT / adapter-fetch percentiles over finished
+requests — one collector for both the simulated and the real backend."""
 from __future__ import annotations
 
-from typing import Iterable, List
+from typing import List
 
 
 def percentile(values: List[float], p: float) -> float:
@@ -16,14 +17,17 @@ class MetricsCollector:
     def __init__(self):
         self.ttfts: List[float] = []
         self.tbts: List[float] = []
+        self.fetch_latencies: List[float] = []
         self.finished = 0
 
     def record(self, req) -> None:
         self.finished += 1
         if req.ttft is not None:
             self.ttfts.append(req.ttft)
-        if req.tbt is not None:
-            self.tbts.append(req.tbt)
+        tbt = req.tbt
+        if tbt is not None and tbt > 0:
+            self.tbts.append(tbt)
+        self.fetch_latencies.append(getattr(req, "fetch_latency", 0.0))
 
     def summary(self) -> dict:
         return {
@@ -34,4 +38,9 @@ class MetricsCollector:
             "mean_tbt": (sum(self.tbts) / len(self.tbts)
                          if self.tbts else float("nan")),
             "p95_tbt": percentile(self.tbts, 95),
+            "mean_fetch_latency": (sum(self.fetch_latencies) /
+                                   len(self.fetch_latencies)
+                                   if self.fetch_latencies else 0.0),
+            "p95_fetch_latency": percentile(self.fetch_latencies, 95)
+            if self.fetch_latencies else 0.0,
         }

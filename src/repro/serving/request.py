@@ -1,40 +1,10 @@
-"""Serving request lifecycle objects."""
-from __future__ import annotations
+"""Serving request lifecycle objects.
 
-import dataclasses
-import enum
-from typing import List, Optional
+The actual lifecycle type lives in :mod:`repro.core.request` so that the
+simulator (which must stay jax-free on its hot path) and the real engine
+share one request class. This module re-exports it under the historical
+names used by the engine-side code and tests.
+"""
+from repro.core.request import Phase, Request, ServeRequest  # noqa: F401
 
-
-class Phase(enum.Enum):
-    QUEUED = "queued"
-    PREFILL = "prefill"
-    DECODE = "decode"
-    DONE = "done"
-
-
-@dataclasses.dataclass
-class Request:
-    req_id: int
-    adapter_id: str
-    prompt: List[int]
-    max_new_tokens: int
-    arrival: float = 0.0
-    # lifecycle
-    phase: Phase = Phase.QUEUED
-    output: List[int] = dataclasses.field(default_factory=list)
-    slot: int = -1                   # engine batch slot
-    t_first_token: Optional[float] = None
-    t_finish: Optional[float] = None
-
-    @property
-    def ttft(self) -> Optional[float]:
-        if self.t_first_token is None:
-            return None
-        return self.t_first_token - self.arrival
-
-    @property
-    def tbt(self) -> Optional[float]:
-        if self.t_finish is None or len(self.output) <= 1:
-            return None
-        return (self.t_finish - self.t_first_token) / (len(self.output) - 1)
+__all__ = ["Phase", "Request", "ServeRequest"]

@@ -1,0 +1,66 @@
+"""Use real `hypothesis` when installed; otherwise a tiny fallback so
+the property tests still collect and run (seeded random sampling, no
+shrinking). Only the strategy surface these tests use is implemented:
+integers / floats / sampled_from / lists / tuples + @given + @settings.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _StModule:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda rng: tuple(e.draw(rng) for e in elems))
+
+    st = _StModule()
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper():
+                # @settings sits above @given, so it annotates `wrapper`
+                n = getattr(wrapper, "_max_examples", 20)
+                for example in range(n):
+                    rng = random.Random(0xC0FFEE + example)
+                    drawn = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*drawn, **drawn_kw)
+            # no functools.wraps: pytest must see the zero-arg signature,
+            # not the inner function's drawn parameters (as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,162 @@
+"""Unified cluster serving API: sim-vs-engine backend parity, mid-flight
+rebalancing under workload drift, placement-aware engine banks, routing
+errors, and replay non-mutation."""
+import copy
+import random
+
+import jax
+import pytest
+
+from repro.cluster import NetworkModel
+from repro.configs import get_smoke_config
+from repro.core import (AdapterInfo, RoutingTable, ServeRequest,
+                        UnknownAdapterError)
+from repro.models import model as M
+from repro.serving import (EngineBackend, LoRAServeCluster, Request,
+                           ServingEngine, SimBackend, replay)
+from repro.traces import make_adapters, synth_trace
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("llama-7b-paper")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mini_trace(adapters, cfg, n, prompt_len=6, output_len=3, gap=0.05):
+    rng = random.Random(7)
+    out = []
+    for i in range(n):
+        a = adapters[i % len(adapters)]
+        prompt = [rng.randrange(1, cfg.vocab_size)
+                  for _ in range(prompt_len)]
+        out.append(ServeRequest(req_id=i, adapter_id=a.adapter_id,
+                                rank=a.rank, prompt_len=prompt_len,
+                                output_len=output_len, prompt=prompt,
+                                arrival=i * gap))
+    return out
+
+
+def test_sim_engine_backend_parity(setup):
+    """Same trace + same policy seed => identical request->server routing
+    on both substrates (the facade's control plane is backend-agnostic)."""
+    cfg, params = setup
+    adapters = [AdapterInfo(f"ad{i}-r{r}", r, nbytes=r * 1000)
+                for i, r in enumerate([8, 8, 16, 64])]
+    trace = _mini_trace(adapters, cfg, 6)
+
+    def make(backend):
+        return LoRAServeCluster(backend, adapters, policy="loraserve",
+                                network=NetworkModel(),
+                                rebalance_period=1e9, seed=5)
+
+    sim = make(SimBackend(2, adapter_nbytes={a.adapter_id: a.nbytes
+                                             for a in adapters}))
+    sim_res = sim.run(copy.deepcopy(trace))
+    eng = make(EngineBackend(cfg, params, 2, max_batch=2, max_len=16))
+    eng_res = eng.run(copy.deepcopy(trace))
+
+    assert sim.routed == eng.routed
+    assert sim_res.per_server_counts == eng_res.per_server_counts
+    assert sim_res.completed() == len(trace)
+    assert eng_res.completed() == len(trace)
+    # engine results carry real decoded tokens
+    assert all(r.n_output >= 3 for r in eng_res.results)
+
+
+def test_drift_triggers_midflight_rebalance():
+    """Shifting popularity: the control loop re-places adapters while the
+    trace is in flight, and post-rebalance requests follow the updated
+    routing (land outside their initial placement)."""
+    adapters = make_adapters(16, seed=1)
+    trace = synth_trace(adapters, rps=20, duration=60,
+                        popularity="shifting", seed=2)
+    backend = SimBackend(3, timeout=60)
+    cluster = LoRAServeCluster(backend, adapters, policy="loraserve",
+                               network=NetworkModel(),
+                               rebalance_period=10.0, seed=3)
+    res = cluster.run(trace)
+    assert res.completed() == len(trace)
+    assert res.rebalances >= 1
+    assert res.placement_changed()
+    p0, pN = res.placements[0], res.placements[-1]
+    moved = [aid for aid in p0 if set(p0[aid]) != set(pN[aid])]
+    assert moved, "rebalance should re-place at least one adapter"
+    assert any(r.server not in p0[r.adapter_id]
+               for r in res.results
+               if r.finished and r.adapter_id in moved), \
+        "post-rebalance requests must follow the updated routing"
+
+
+def test_static_policy_never_rebalances():
+    adapters = make_adapters(8, seed=1)
+    trace = synth_trace(adapters, rps=10, duration=30, seed=2)
+    cluster = LoRAServeCluster(SimBackend(2, timeout=60), adapters,
+                               policy="slora-random",
+                               network=NetworkModel(),
+                               rebalance_period=5.0, seed=3)
+    res = cluster.run(trace)
+    assert res.rebalances == 0 and len(res.placements) == 1
+    assert res.completed() == len(trace)
+
+
+def test_engine_bank_is_placed_subset_only(setup):
+    """A server hosting ranks {8, 16} pads its bank to 16 — not to the
+    global max rank — and rebalances reshape it without perturbing the
+    weights of retained adapters."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, {"a-r8": 8, "b-r16": 16},
+                        max_batch=2, max_len=16)
+    assert eng.max_rank == 16
+    assert eng.bank["q"]["A"].shape[-1] == 16
+    a_before = eng.bank["q"]["A"][:, 0, :, :8]
+
+    assert eng.load_adapters({"c-r128": 128})
+    assert eng.max_rank == 128
+    assert eng.bank["q"]["A"].shape[-1] == 128
+    a_after = eng.bank["q"]["A"][:, 0, :, :8]     # "a-r8" still index 0
+    assert jax.numpy.allclose(a_before, a_after)
+
+    assert eng.evict_adapter("c-r128")
+    assert eng.max_rank == 16
+    assert not eng.evict_adapter("missing")
+
+
+def test_engine_rebalance_with_inflight_requests(setup):
+    """Loading/evicting adapters mid-decode remaps co-batched slots; the
+    in-flight request still completes with the right token budget."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, {"a-r8": 8, "b-r16": 16},
+                        max_batch=2, max_len=24)
+    req = Request(0, "b-r16", list(range(1, 7)), 4)
+    eng.submit(req)
+    eng.step()                       # prefill + first decode
+    assert eng.active == 1
+    eng.load_adapters({"z-r64": 64})   # mid-flight bank reshape
+    assert not eng.evict_adapter("b-r16")   # in flight -> refused
+    eng.run_until_drained()
+    assert len(req.output) >= 4
+    assert eng.evict_adapter("b-r16")       # drained -> allowed
+
+
+def test_unknown_adapter_raises_clear_error():
+    table = RoutingTable({"a": {0: 1.0}})
+    with pytest.raises(UnknownAdapterError) as ei:
+        table.route("ghost")
+    assert "ghost" in str(ei.value)
+    with pytest.raises(UnknownAdapterError):
+        table.servers("ghost")
+    assert isinstance(ei.value, KeyError)     # old callers still catch
+
+
+def test_replay_does_not_mutate_arrivals(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, {"a-r8": 8}, max_batch=2, max_len=16)
+    reqs = [Request(i, "a-r8", list(range(1, 6)), 2, arrival=i * 0.01)
+            for i in range(3)]
+    arrivals = [r.arrival for r in reqs]
+    summ = replay(eng, reqs, speedup=4.0)
+    assert summ["finished"] == 3
+    assert [r.arrival for r in reqs] == arrivals
+    assert all(r.ttft is not None and r.ttft >= 0 for r in reqs)

@@ -1,7 +1,7 @@
 """Unified paging pool (S-LoRA §II-B.2): allocation, decode growth,
 adapter LRU eviction under KV pressure, pool invariants (hypothesis)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.serving.paging import OutOfPages, UnifiedPagePool
 

@@ -3,7 +3,7 @@ invariants."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.core import AdapterInfo, PlacementContext, assign_loraserve
 from repro.core.placement import _budgets

@@ -2,7 +2,7 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.cluster import NetworkModel
 from repro.core import AdapterInfo, DistributedAdapterPool, RoutingTable
