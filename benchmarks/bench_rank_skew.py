@@ -1,5 +1,8 @@
 """Paper Fig 22 — sensitivity to rank-popularity skew: power-law alpha
-in {1/3, 1, 3}, 100 adapters, 4 servers."""
+in {1/3, 1, 3}, 100 adapters, 4 servers — plus the beyond-paper
+padded-vs-bucketed A/B: the same trace replayed with rank-bucketed
+server banks, showing the max-rank padding tax (and its elimination)
+per policy."""
 from __future__ import annotations
 
 import copy
@@ -10,6 +13,7 @@ from repro.traces import make_adapters, synth_trace
 from .common import emit, timed
 
 POLICIES = ["loraserve", "slora-random", "slora-contiguous"]
+BANK_MODES = ["padded", "bucketed"]
 
 
 def run(fast: bool = False):
@@ -20,12 +24,21 @@ def run(fast: bool = False):
         trace = synth_trace(adapters, rps=20, duration=150,
                             popularity="powerlaw", alpha=alpha, seed=2)
         for pol in POLICIES:
-            sim = ClusterSimulator(4, adapters, policy=pol, seed=3,
-                                   timeout=60, warmup=40)
-            res, us = timed(lambda: sim.run(copy.deepcopy(trace)),
-                            repeat=1)
+            p95 = {}
+            for mode in BANK_MODES:
+                sim = ClusterSimulator(4, adapters, policy=pol, seed=3,
+                                       timeout=60, warmup=40,
+                                       bank_mode=mode)
+                res, us = timed(lambda: sim.run(copy.deepcopy(trace)),
+                                repeat=1)
+                p95[mode] = res.p95_ttft()
+                rows.append(emit(
+                    f"fig22/alpha{alpha:.2f}/{pol}/{mode}", us,
+                    f"p95_ttft={res.p95_ttft():.3f}s;"
+                    f"timeout={res.timed_out}"))
+            saved = 1.0 - p95["bucketed"] / p95["padded"] \
+                if p95["padded"] > 0 else 0.0
             rows.append(emit(
-                f"fig22/alpha{alpha:.2f}/{pol}", us,
-                f"p95_ttft={res.p95_ttft():.3f}s;"
-                f"timeout={res.timed_out}"))
+                f"fig22/alpha{alpha:.2f}/{pol}/padding-tax", 0.0,
+                f"p95_saving={saved:.3f}"))
     return rows

@@ -17,6 +17,10 @@ Calibration (derivation):
     P95 TTFT skew in simulation.
   * Fig 3 bottom — decode (TBT) rank sensitivity is "subtle" (memory
     bound): decode lora factor is scaled by DECODE_LORA_DAMP = 0.15.
+  * Beyond-paper: ``prefill_time_bucketed`` / ``decode_time_bucketed``
+    charge the *sum of per-rank-bucket* costs instead of max(rank) — the
+    cost-model mirror of rank-bucketed banks, used by ``SimServer`` when
+    ``bank_mode="bucketed"``.
 
 Hardware reference: A100 SXM 40GB (312 TF bf16, ~1.55 TB/s HBM), the
 paper's Standard_ND96asr_v4 nodes. The TPU deployment path of this repo
@@ -26,7 +30,7 @@ paper's GPUs so its figures are comparable with the paper's.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, Mapping
 
 A100_FLOPS = 312e12          # bf16 peak / GPU
 A100_HBM = 1.55e12           # bytes/s
@@ -58,12 +62,28 @@ class ServerModel:
             return 0.0
         return X1 * rank * (self.d_model / 4096.0) / (self.tp ** TP_BETA)
 
+    def _prefill_per_token(self) -> float:
+        return 2.0 * self.n_params / (self.tp * A100_FLOPS * MFU_PREFILL)
+
     def prefill_time(self, n_tokens: int, max_rank: int) -> float:
         """Seconds for one prefill iteration of `n_tokens` total tokens,
         co-batched with max adapter rank `max_rank` (everyone pays it)."""
-        base = 2.0 * self.n_params * n_tokens / (
-            self.tp * A100_FLOPS * MFU_PREFILL)
+        base = self._prefill_per_token() * n_tokens
         return ITER_OVERHEAD + base * (1.0 + self.lora_factor(max_rank))
+
+    def prefill_time_bucketed(self, bucket_tokens: Mapping[int, int]
+                              ) -> float:
+        """Rank-bucketed prefill: `bucket_tokens` maps bucket rank ->
+        token count in that bucket. The base model pass covers all tokens
+        once; each bucket's LoRA overhead applies only to its own tokens
+        at its own rank (sum of per-bucket costs), instead of every token
+        paying `max(rank)` — strictly cheaper than `prefill_time` for any
+        batch mixing >= 2 rank buckets."""
+        per_tok = self._prefill_per_token()
+        total = sum(bucket_tokens.values())
+        lora = sum(nt * self.lora_factor(r)
+                   for r, nt in bucket_tokens.items())
+        return ITER_OVERHEAD + per_tok * (total + lora)
 
     def adapter_read_bytes(self, rank: int) -> float:
         """BGMV gather per request per decode iteration: A+B on 4 targets,
@@ -72,13 +92,37 @@ class ServerModel:
         n_layers = 32 * (self.d_model / 4096.0)
         return 2 * 2 * 4 * self.d_model * rank * n_layers
 
-    def decode_time(self, batch: int, max_rank: int) -> float:
+    def kv_read_bytes(self, seq_len: int = 512) -> float:
+        """Per-request KV read per decode iteration: K+V, bf16, every
+        layer, GQA KV width d_model/4 (8 KV heads x head_dim d/32 at the
+        Llama-7B reference shape)."""
+        n_layers = 32 * (self.d_model / 4096.0)
+        kv_width = self.d_model / 4.0
+        return 2 * 2 * n_layers * kv_width * seq_len
+
+    def decode_time(self, batch: int, max_rank: int,
+                    seq_len: int = 512) -> float:
         """Seconds for one decode iteration (1 token for every running
         request). Weight-read bound; KV + per-request max-rank adapter
         gathers grow with batch."""
         weight_bytes = 2.0 * self.n_params
-        kv_bytes = batch * 2 * 2 * 32 * 1024 * 512   # rough per-req KV read
+        kv_bytes = batch * self.kv_read_bytes(seq_len)
         lora_bytes = batch * self.adapter_read_bytes(max_rank)
+        base = (weight_bytes + kv_bytes + lora_bytes) / (
+            self.tp * A100_HBM * HBM_EFF_DECODE)
+        return ITER_OVERHEAD + base
+
+    def decode_time_bucketed(self, bucket_batch: Mapping[int, int],
+                             seq_len: int = 512) -> float:
+        """Rank-bucketed decode: `bucket_batch` maps bucket rank ->
+        number of running requests in that bucket. Each request's adapter
+        gather is at its own bucket rank (sum of per-bucket reads)
+        instead of the batch max."""
+        batch = sum(bucket_batch.values())
+        weight_bytes = 2.0 * self.n_params
+        kv_bytes = batch * self.kv_read_bytes(seq_len)
+        lora_bytes = sum(cnt * self.adapter_read_bytes(r)
+                         for r, cnt in bucket_batch.items())
         base = (weight_bytes + kv_bytes + lora_bytes) / (
             self.tp * A100_HBM * HBM_EFF_DECODE)
         return ITER_OVERHEAD + base

@@ -1,24 +1,41 @@
 """Iteration-level simulated LLM inference server (continuous batching à
 la Orca/S-LoRA): each iteration is either a prefill batch (token-budget
-bound) or a decode step for all running requests. Co-batched iterations
-pay the cost of the *maximum* adapter rank present — the interference
-mechanism the paper analyzes (§III-A.5).
+bound) or a decode step for all running requests.
+
+In the default ``bank_mode="padded"`` co-batched iterations pay the cost
+of the *maximum* adapter rank present — the interference mechanism the
+paper analyzes (§III-A.5). ``bank_mode="bucketed"`` mirrors the
+rank-bucketed bank layout of the real engine: each iteration costs the
+sum of per-bucket charges (``prefill_time_bucketed`` /
+``decode_time_bucketed``), eliminating the padding tax.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.request import SimRequest  # noqa: F401  (re-export)
+from repro.lora.bank import rank_bucket
 
 from .costmodel import ServerModel
+
+
+def _bucket_sums(reqs, value) -> Dict[int, int]:
+    """Aggregate `value(r)` per power-of-two rank bucket."""
+    out: Dict[int, int] = {}
+    for r in reqs:
+        b = rank_bucket(max(1, r.rank))
+        out[b] = out.get(b, 0) + value(r)
+    return out
 
 
 class SimServer:
     """State machine advanced by the cluster simulator's event loop."""
 
-    def __init__(self, server_id: int, model: ServerModel):
+    def __init__(self, server_id: int, model: ServerModel,
+                 bank_mode: str = "padded"):
         self.sid = server_id
         self.model = model
+        self.bank_mode = bank_mode
         self.waiting: List[SimRequest] = []
         self.running: List[SimRequest] = []
         self.busy_until: float = 0.0
@@ -26,17 +43,30 @@ class SimServer:
         self.prefill_tokens = 0
         self.busy_time = 0.0
 
+    # -- iteration costs (bank-layout aware) ------------------------------
+    def _prefill_cost(self, batch: List[SimRequest], tokens: int) -> float:
+        if self.bank_mode == "bucketed":
+            return self.model.prefill_time_bucketed(
+                _bucket_sums(batch, lambda r: r.prompt_len))
+        return self.model.prefill_time(tokens,
+                                       max(r.rank for r in batch))
+
+    def _decode_cost(self, running: List[SimRequest]) -> float:
+        if self.bank_mode == "bucketed":
+            return self.model.decode_time_bucketed(
+                _bucket_sums(running, lambda r: 1))
+        return self.model.decode_time(len(running),
+                                      max(r.rank for r in running))
+
     # -- load introspection (used by Toppings routing) --------------------
     def estimated_work(self, now: float) -> float:
         """Seconds of outstanding work: queued prefills + remaining decode."""
         w = max(0.0, self.busy_until - now)
         for r in self.waiting:
-            w += self.model.prefill_time(r.prompt_len, r.rank)
+            w += self._prefill_cost([r], r.prompt_len)
         if self.running:
-            max_rank = max(r.rank for r in self.running)
             remaining = max((r.output_len - r.decoded) for r in self.running)
-            w += remaining * self.model.decode_time(len(self.running),
-                                                    max_rank) / \
+            w += remaining * self._decode_cost(self.running) / \
                 max(1, len(self.running))
         return w
 
@@ -74,8 +104,7 @@ class SimServer:
                 batch.append(r)
                 tokens += r.prompt_len
             if batch:
-                max_rank = max(r.rank for r in batch)
-                t_iter = self.model.prefill_time(tokens, max_rank)
+                t_iter = self._prefill_cost(batch, tokens)
                 end = now + t_iter
                 for r in batch:
                     self.waiting.remove(r)
@@ -91,8 +120,7 @@ class SimServer:
                 self.busy_until = end
                 return end
         if self.running:
-            max_rank = max(r.rank for r in self.running)
-            t_iter = self.model.decode_time(len(self.running), max_rank)
+            t_iter = self._decode_cost(self.running)
             end = now + t_iter
             done = []
             for r in self.running:

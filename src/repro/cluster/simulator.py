@@ -75,8 +75,10 @@ class ClusterSimulator:
                  rebalance_period: float = 15.0,
                  timeout: float = 120.0,
                  warmup: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0,
+                 bank_mode: str = "padded"):
         self.warmup = warmup
+        self.bank_mode = bank_mode
         self.n = n_servers
         self.adapters = adapters
         self.meta = {a.adapter_id: a for a in adapters}
@@ -91,7 +93,8 @@ class ClusterSimulator:
         self.operating_points = profile_operating_points(self.model, ranks)
 
     def run(self, trace: List[SimRequest]) -> SimResult:
-        servers = [SimServer(i, self.model) for i in range(self.n)]
+        servers = [SimServer(i, self.model, bank_mode=self.bank_mode)
+                   for i in range(self.n)]
         demand = DemandEstimator()
         # initial placement from uniform demand prior
         ctx = PlacementContext(

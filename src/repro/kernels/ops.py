@@ -81,29 +81,39 @@ def bgmv(x, A, B, token_adapter, *, scaling: float = 1.0,
 
 
 def sgmv_rank_bucketed(x, banks, token_adapter, adapter_rank_bucket,
-                       *, scaling: float = 1.0, block_t: int = 16,
-                       interpret: bool = True):
+                       *, adapter_local=None, scaling: float = 1.0,
+                       block_t: int = 16, interpret: bool = True):
     """Beyond-paper optimization: group adapters into rank buckets, each
     with its own (A, B) bank pair at its *bucket* rank, so a rank-8 token
     batched with a rank-128 token pays rank-8 compute, not rank-128.
 
     banks: list of (A_i, B_i) per bucket; adapter_rank_bucket: (Na,) int
-    mapping adapter -> bucket. Zero rows keep shapes static: every bucket
-    processes the full token set, but with tokens of other buckets routed
-    to a zero adapter slot — compute per bucket is at bucket rank.
-    Total FLOPs = sum_b T * (d*r_b + r_b*o) instead of T * max_r * (d+o).
+    mapping adapter -> bucket; adapter_local: optional (Na,) mapping
+    adapter -> its row within its bucket's bank (None means every bucket
+    bank is indexed by the global adapter id, i.e. full-width banks).
+
+    Host-level dispatcher (``token_adapter`` must be concrete, like the
+    engine's per-iteration slot indices): each bucket's tokens are
+    *compacted* into a dense sub-batch and only that sub-batch runs
+    through the SGMV kernels at the bucket's rank, then scatters back.
+    Total FLOPs = sum_b T_b * (d*r_b + r_b*o) — each token pays its own
+    bucket — instead of the padded bank's T * max_r * (d+o).
     """
+    import numpy as np
     T, d = x.shape
-    out = None
-    tok_bucket = adapter_rank_bucket[token_adapter]
+    d_out = banks[0][1].shape[-1]
+    tok_adapter = np.asarray(token_adapter)
+    tok_bucket = np.asarray(adapter_rank_bucket)[tok_adapter]
+    local = tok_adapter if adapter_local is None else \
+        np.asarray(adapter_local)[tok_adapter]
+    out = jnp.zeros((T, d_out), x.dtype)
     for i, (A, B) in enumerate(banks):
-        # adapter id within the bucket bank; tokens of other buckets -> 0
-        in_bucket = tok_bucket == i
-        local = jnp.where(in_bucket, token_adapter, 0)
-        y = sgmv(jnp.where(in_bucket[:, None], x, 0), A, B, local,
+        sel = np.nonzero(tok_bucket == i)[0]
+        if sel.size == 0:
+            continue
+        y = sgmv(x[sel], A, B, jnp.asarray(local[sel], jnp.int32),
                  scaling=scaling, block_t=block_t, interpret=interpret)
-        y = jnp.where(in_bucket[:, None], y, 0)
-        out = y if out is None else out + y
+        out = out.at[sel].set(y.astype(out.dtype))
     return out
 
 

@@ -63,6 +63,10 @@ def main():
     ap.add_argument("--policy", default="loraserve",
                     choices=["loraserve", "slora-random",
                              "slora-contiguous", "toppings"])
+    ap.add_argument("--bank-mode", default="padded",
+                    choices=["padded", "bucketed"],
+                    help="LoRA bank layout: max-rank padded (paper "
+                         "baseline) or power-of-two rank buckets")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--duration", type=float, default=6.0,
@@ -81,7 +85,7 @@ def main():
 
     backend = EngineBackend(cfg, params, args.servers, max_batch=4,
                             max_len=args.prompt_len + args.max_new + 8,
-                            seed=args.seed)
+                            seed=args.seed, bank_mode=args.bank_mode)
     cluster = LoRAServeCluster(
         backend, adapters, policy=args.policy, network=NetworkModel(),
         rebalance_period=args.rebalance_period, seed=args.seed)
@@ -95,6 +99,7 @@ def main():
               f"bank_adapters={mem['n_adapters']} "
               f"bank_max_rank={mem['max_rank']}")
     s = report.summary
+    print(f"bank_mode={report.bank_mode}")
     print(f"policy={args.policy} finished={report.completed()}"
           f"/{len(trace)} p95_ttft={s['p95_ttft']:.3f}s "
           f"mean_tbt={s['mean_tbt'] * 1e3:.1f}ms "

@@ -1,7 +1,11 @@
 from .adapter import (Adapter, adapter_key, init_adapter, init_bank,
-                      init_bank_from, merge_adapter, bank_nbytes)
-from .batched import lora_delta, make_lora_cb
+                      init_bank_from, merge_adapter, bank_nbytes, pad_rank)
+from .bank import LoRABank, build_bank, rank_bucket
+from .batched import (apply_bank_sgmv, lora_delta, lora_delta_bucketed,
+                      make_lora_cb)
 
 __all__ = ["Adapter", "adapter_key", "init_adapter", "init_bank",
-           "init_bank_from", "merge_adapter", "bank_nbytes", "lora_delta",
+           "init_bank_from", "merge_adapter", "bank_nbytes", "pad_rank",
+           "LoRABank", "build_bank", "rank_bucket",
+           "apply_bank_sgmv", "lora_delta", "lora_delta_bucketed",
            "make_lora_cb"]

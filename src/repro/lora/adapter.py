@@ -91,7 +91,7 @@ def init_bank(cfg, ranks, key, n_layers=None, dtype=jnp.float32):
         key, k2 = jax.random.split(key)
         a = init_adapter(cfg, r, k2, n_layers=n_layers, dtype=dtype)
         # pad rank dim to max_r
-        a = jax.tree.map(lambda t: _pad_rank(t, max_r), a)
+        a = jax.tree.map(lambda t: pad_rank(t, max_r), a)
         singles.append(a)
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *singles)
 
@@ -119,11 +119,11 @@ def init_bank_from(cfg, adapter_ranks: Dict[str, int], key, n_layers=None,
     for aid in ids:
         a = init_adapter(cfg, adapter_ranks[aid], adapter_key(key, aid),
                          n_layers=n_layers, dtype=dtype)
-        singles.append(jax.tree.map(lambda t: _pad_rank(t, max_r), a))
+        singles.append(jax.tree.map(lambda t: pad_rank(t, max_r), a))
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *singles)
 
 
-def _pad_rank(t: jax.Array, max_r: int) -> jax.Array:
+def pad_rank(t: jax.Array, max_r: int) -> jax.Array:
     # A: (L, in, r) -> pad last; B: (L, r, out) -> pad middle
     if t.shape[-1] <= max_r and t.shape[-2] > t.shape[-1]:
         return jnp.pad(t, ((0, 0), (0, 0), (0, max_r - t.shape[-1])))

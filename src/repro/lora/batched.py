@@ -1,13 +1,21 @@
 """Batched heterogeneous-adapter application.
 
-Two execution paths:
+Two execution paths, each with a padded and a bucketed form:
   * gather-einsum (default, lowerable on any backend; used by the dry-run
-    and the CPU engine) — per-row adapter index gathers its A/B from the
-    bank, everything padded to the bank's max rank (the paper's co-batch
-    padding tax, faithfully);
-  * Pallas SGMV (``repro.kernels.ops``) — TPU kernel path, validated in
-    interpret mode, selected via ``use_pallas=True`` for token-major
-    flattened layouts.
+    and the CPU engine) — padded: per-row adapter index gathers its A/B
+    from the bank, everything padded to the bank's max rank (the paper's
+    co-batch padding tax, faithfully); bucketed: one masked pass per rank
+    bucket at the bucket's own rank (rows outside the bucket are zeroed),
+    numerically identical to padded because padding is inert;
+  * Pallas SGMV (``repro.kernels.ops``) — TPU kernel path for token-major
+    flattened layouts, ``apply_bank_sgmv`` dispatching ``sgmv`` (padded)
+    or the token-compacting ``sgmv_rank_bucketed`` (bucketed).
+
+``make_lora_cb`` is layout-polymorphic: a dict bank slice selects the
+padded path with ``idx: (Bt,)`` global adapter rows; a tuple of per-
+bucket slices selects the bucketed path with ``idx: (Bt, 2)`` carrying
+(bucket, local-row) per request — the shape ``LoRABank.lora_idx``
+produces.
 """
 from __future__ import annotations
 
@@ -34,11 +42,45 @@ def lora_delta(x, A, B, idx, scaling: float = 1.0):
     return constrain(out * scaling, "batch", None, None)
 
 
+def lora_delta_bucketed(x, bucket_targets, idx, scaling: float = 1.0):
+    """x: (Bt, S, d); bucket_targets: sequence of per-bucket {"A","B"}
+    slices (bucket b at rank r_b); idx: (Bt, 2) int32 of (bucket, local).
+
+    Each bucket runs a gather-einsum at its own rank over the full row
+    set with out-of-bucket rows masked to zero — static shapes, and each
+    row's *numerics* come only from its own bucket.  (The compute saving
+    of bucketing lives on the token-compacting SGMV path and in the cost
+    model; this dense form trades a masked pass per bucket for backend
+    portability.)
+    """
+    bucket, local = idx[..., 0], idx[..., 1]
+    out = None
+    for b, t in enumerate(bucket_targets):
+        sel = bucket == b
+        y = lora_delta(x, t["A"], t["B"], jnp.where(sel, local, 0), scaling)
+        y = jnp.where(sel[:, None, None], y, 0.0)
+        out = y if out is None else out + y
+    return out
+
+
 def make_lora_cb(bank_layer, idx, scaling: float = 1.0):
-    """Bind one layer's bank slice {target: {"A","B"}} and per-row adapter
-    indices into the projection hook used by the attention/ssm blocks."""
+    """Bind one layer's bank slice and per-row adapter indices into the
+    projection hook used by the attention/ssm blocks.
+
+    ``bank_layer`` is {target: {"A","B"}} for a padded bank, or a tuple
+    of such dicts (one per rank bucket) for a bucketed bank; ``idx`` is
+    the matching ``LoRABank.lora_idx`` output."""
     if bank_layer is None:
         return None
+
+    if isinstance(bank_layer, (tuple, list)):
+        def cb_bucketed(name, x):
+            targets = [bk.get(name) for bk in bank_layer]
+            if any(t is None for t in targets):
+                return 0.0
+            return lora_delta_bucketed(x, targets, idx, scaling)
+
+        return cb_bucketed
 
     def cb(name, x):
         t = bank_layer.get(name)
@@ -47,3 +89,27 @@ def make_lora_cb(bank_layer, idx, scaling: float = 1.0):
         return lora_delta(x, t["A"], t["B"], idx, scaling)
 
     return cb
+
+
+def apply_bank_sgmv(x, bank, name: str, layer: int, token_adapter, *,
+                    scaling: float = 1.0, block_t: int = 16,
+                    interpret: bool = True):
+    """Pallas path for token-major flattened layouts: x: (T, d) tokens,
+    token_adapter: (T,) *global* adapter rows of ``bank`` (a LoRABank).
+
+    Padded banks dispatch one ``sgmv`` over the full token set at the
+    bank max rank; bucketed banks dispatch ``sgmv_rank_bucketed``, which
+    compacts each bucket's tokens and runs them at the bucket's own rank
+    (FLOPs = sum_b T_b * r_b * (d + o) instead of T * max_r * (d + o)).
+    """
+    from repro.kernels.ops import sgmv, sgmv_rank_bucketed
+    if bank.mode == "padded":
+        t = bank.data[name]
+        return sgmv(x, t["A"][layer], t["B"][layer], token_adapter,
+                    scaling=scaling, block_t=block_t, interpret=interpret)
+    banks = [(bk[name]["A"][layer], bk[name]["B"][layer])
+             for bk in bank.data]
+    return sgmv_rank_bucketed(x, banks, token_adapter, bank.adapter_bucket,
+                              adapter_local=bank.adapter_local,
+                              scaling=scaling, block_t=block_t,
+                              interpret=interpret)

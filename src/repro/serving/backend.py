@@ -69,7 +69,7 @@ class ServingBackend(Protocol):
     def hosted_adapters(self, server_id: int) -> Dict[str, int]: ...
 
     def memory_profile(self) -> List[Dict[str, float]]:
-        """Per-server {n_adapters, max_rank, adapter_bytes}."""
+        """Per-server {n_adapters, max_rank, adapter_bytes, bank_mode}."""
         ...
 
 
@@ -81,12 +81,15 @@ class SimBackend:
 
     def __init__(self, n_servers: int, server_model=None,
                  timeout: float = 120.0,
-                 adapter_nbytes: Optional[Dict[str, int]] = None):
+                 adapter_nbytes: Optional[Dict[str, int]] = None,
+                 bank_mode: str = "padded"):
         from repro.cluster.costmodel import ServerModel
         from repro.cluster.server import SimServer
         self.n_servers = n_servers
+        self.bank_mode = bank_mode
         self.model = server_model or ServerModel()
-        self.servers = [SimServer(i, self.model) for i in range(n_servers)]
+        self.servers = [SimServer(i, self.model, bank_mode=bank_mode)
+                        for i in range(n_servers)]
         self.timeout = timeout
         self._nbytes = adapter_nbytes or {}
         self._hosted: List[Dict[str, int]] = [{} for _ in range(n_servers)]
@@ -163,6 +166,7 @@ class SimBackend:
                 "max_rank": max(hosted.values()) if hosted else 0,
                 "adapter_bytes": sum(self._nbytes.get(a, 0)
                                      for a in hosted),
+                "bank_mode": self.bank_mode,
             })
         return out
 
@@ -182,12 +186,14 @@ class EngineBackend:
 
     def __init__(self, cfg, params, n_servers: int, *,
                  max_batch: int = 4, max_len: int = 64, seed: int = 0,
-                 timeout: float = 120.0, page_pool_factory=None):
+                 timeout: float = 120.0, page_pool_factory=None,
+                 bank_mode: str = "padded"):
         from .engine import ServingEngine
         self._engine_cls = ServingEngine
         self.cfg = cfg
         self.params = params
         self.n_servers = n_servers
+        self.bank_mode = bank_mode
         self.max_batch = max_batch
         self.max_len = max_len
         self.seed = seed
@@ -269,7 +275,8 @@ class EngineBackend:
             self.engines[server_id] = self._engine_cls(
                 self.cfg, self.params, dict(adapter_ranks),
                 max_batch=self.max_batch, max_len=self.max_len,
-                seed=self.seed, page_pool=pool, clock=self.wall_now)
+                seed=self.seed, bank_mode=self.bank_mode,
+                page_pool=pool, clock=self.wall_now)
         else:
             self.engines[server_id].load_adapters(adapter_ranks)
 
@@ -287,9 +294,11 @@ class EngineBackend:
         for eng in self.engines:
             if eng is None:
                 out.append({"n_adapters": 0, "max_rank": 0,
-                            "adapter_bytes": 0})
+                            "adapter_bytes": 0,
+                            "bank_mode": self.bank_mode})
             else:
                 out.append({"n_adapters": len(eng.adapter_ids),
                             "max_rank": eng.max_rank,
-                            "adapter_bytes": bank_nbytes(eng.bank)})
+                            "adapter_bytes": bank_nbytes(eng.bank),
+                            "bank_mode": eng.bank_mode})
         return out

@@ -63,6 +63,7 @@ class ClusterReport:
     total_adapter_bytes: int
     memory_profile: List[dict]
     warmup: float = 0.0
+    bank_mode: str = "padded"          # bank layout the backend ran with
 
     def _eligible(self) -> List[ServeResult]:
         return [r for r in self.results
@@ -262,4 +263,5 @@ class LoRAServeCluster:
             total_adapter_bytes=total_bytes,
             memory_profile=self.backend.memory_profile(),
             warmup=self.warmup,
+            bank_mode=getattr(self.backend, "bank_mode", "padded"),
         )

@@ -14,6 +14,12 @@ subset's max rank — not the global one. ``load_adapters`` /
 ``evict_adapter`` rebuild the bank mid-flight, remapping the adapter
 indices of co-batched slots, so a cluster rebalance can reshape a
 server's bank while requests are decoding.
+
+``bank_mode`` selects the bank layout (``repro.lora.bank.LoRABank``):
+``"padded"`` (default, max-rank padding — the paper-faithful baseline)
+or ``"bucketed"`` (power-of-two rank buckets, each at its own rank).
+Both produce token-identical outputs; they differ only in compute cost,
+which makes padded-vs-bucketed A/Bs meaningful on this real engine.
 """
 from __future__ import annotations
 
@@ -23,7 +29,8 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.lora.adapter import init_bank_from
+from repro.lora.adapter import Adapter
+from repro.lora.bank import build_bank
 from repro.models import model as M
 
 from .metrics import MetricsCollector
@@ -37,9 +44,11 @@ class ServingEngine:
     def __init__(self, cfg, params, adapter_ranks: Dict[str, int],
                  *, max_batch: int = 8, max_len: int = 512,
                  seed: int = 0, scaling: float = 1.0,
+                 bank_mode: str = "padded",
                  page_pool: Optional[UnifiedPagePool] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
+        self.bank_mode = bank_mode
         self.page_pool = page_pool
         self.params = params
         self.max_batch = max_batch
@@ -88,17 +97,19 @@ class ServingEngine:
     # -- placement-aware bank management --------------------------------
     def _rebuild_bank(self, adapter_ranks: Dict[str, int]) -> None:
         self.adapter_ranks = adapter_ranks
-        self.adapter_ids = sorted(adapter_ranks)
-        self.ranks = [adapter_ranks[a] for a in self.adapter_ids]
-        self.max_rank = max(self.ranks)      # bank padding = subset max
         n_layers = 1 if self.cfg.family == "hybrid" else self.cfg.n_layers
-        self.bank = init_bank_from(self.cfg, adapter_ranks, self._bank_key,
-                                   n_layers=n_layers)
+        self.lora_bank = build_bank(self.cfg, adapter_ranks, self._bank_key,
+                                    mode=self.bank_mode, n_layers=n_layers)
+        self.adapter_ids = list(self.lora_bank.adapter_ids)
+        self.ranks = list(self.lora_bank.ranks)
+        self.max_rank = self.lora_bank.max_rank  # padding = subset max
+        self.bank = self.lora_bank.data
         self.bank_rebuilds += 1
         # remap adapter indices of co-batched slots to the new bank layout
         idx = [self.adapter_ids.index(r.adapter_id) if r is not None else 0
                for r in self.slots]
         self.slot_adapter = jnp.asarray(idx, jnp.int32)
+        self._slot_lora = self.lora_bank.lora_idx(self.slot_adapter)
 
     def load_adapters(self, adapter_ranks: Dict[str, int]) -> bool:
         """Add adapters to this server's bank (placement update or pool
@@ -138,9 +149,10 @@ class ServingEngine:
         return self.adapter_ids.index(adapter_id)
 
     def _prefill_fn(self, length: int):
-        # keyed by (prompt length, bank max rank): bank reshapes after a
-        # rebalance retrigger tracing for that shape only
-        key = (length, self.max_rank, len(self.adapter_ids))
+        # keyed by (prompt length, bank layout signature): bank reshapes
+        # after a rebalance retrigger tracing for that shape only; the
+        # bucketed signature is the tuple of (bucket rank, count) pairs
+        key = (length,) + self.lora_bank.signature
         if key not in self._prefill_cache:
             cfg = self.cfg
 
@@ -165,11 +177,15 @@ class ServingEngine:
                 # co-batched)
                 self.page_pool.alloc_kv(f"req{req.req_id}",
                                         len(req.prompt))
-                self.page_pool.ensure_adapter(
-                    req.adapter_id,
-                    self.ranks[aidx] * 4 * 2 * self.cfg.d_model *
-                    (1 if self.cfg.family == "hybrid"
-                     else self.cfg.n_layers))
+                # footprint from the same formula the cluster/placement
+                # accounting uses, not an ad-hoc per-target guess; hybrid
+                # banks hold a single shared-attn LoRA layer, so the
+                # per-layer share is what this server actually pages in
+                nbytes = Adapter(req.adapter_id,
+                                 self.ranks[aidx]).nbytes(self.cfg)
+                if self.cfg.family == "hybrid":
+                    nbytes = max(1, nbytes // self.cfg.n_layers)
+                self.page_pool.ensure_adapter(req.adapter_id, nbytes)
                 self.page_pool.pin_adapter(req.adapter_id)
             toks = jnp.asarray([req.prompt], jnp.int32)
             frontend = None
@@ -180,17 +196,17 @@ class ServingEngine:
                 frontend = jnp.zeros(
                     (1, self.cfg.encoder.n_frames, self.cfg.d_model))
             fn = self._prefill_fn(len(req.prompt))
+            lidx = self.lora_bank.lora_idx(jnp.asarray([aidx], jnp.int32))
             if frontend is not None:
-                logits, cache1 = fn(self.params, toks, self.bank,
-                                    jnp.asarray([aidx], jnp.int32),
+                logits, cache1 = fn(self.params, toks, self.bank, lidx,
                                     frontend)
             else:
-                logits, cache1 = fn(self.params, toks, self.bank,
-                                    jnp.asarray([aidx], jnp.int32))
+                logits, cache1 = fn(self.params, toks, self.bank, lidx)
             first = int(jnp.argmax(logits[0]))
             self.cache = self._merge(self.cache, cache1, slot,
                                      len(req.prompt))
             self.slot_adapter = self.slot_adapter.at[slot].set(aidx)
+            self._slot_lora = self.lora_bank.lora_idx(self.slot_adapter)
             self.last_token = self.last_token.at[slot].set(first)
             req.phase = Phase.DECODE
             req.slot = slot
@@ -205,7 +221,7 @@ class ServingEngine:
             return
         logits, self.cache = self._decode(
             self.params, self.cache, self.last_token, self.bank,
-            self.slot_adapter)
+            self._slot_lora)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.last_token = nxt
         now = self._clock()
