@@ -18,7 +18,7 @@ from .common import fmt_rows
 
 BENCHES = {
     "interference": lambda fast: bench_interference.run(),
-    "transfer": lambda fast: bench_transfer.run(),
+    "transfer": bench_transfer.run,
     "kernel": lambda fast: bench_kernel.run(),
     "placement": bench_placement.run,
     "workloads": bench_workloads.run,

@@ -1,15 +1,28 @@
-"""Adapter-transfer model (paper Fig 14): latency of fetching a tensor
-from local host memory, a remote server over GPUDirect-RDMA/InfiniBand,
-or local SSD. The paper's observation: IB GDR ~ local host->GPU latency;
-SSD is prohibitive.
+"""Adapter-transfer model (paper Fig 14) with live link state.
 
-The TPU deployment mapping (DESIGN.md §3) adds an "ici" source with
-v5e-class inter-host bandwidth.
+Latency of fetching a tensor from local host memory, a remote server
+over GPUDirect-RDMA/InfiniBand, or local SSD. The paper's observation:
+IB GDR ~ local host->GPU latency; SSD is prohibitive. The TPU
+deployment mapping (DESIGN.md §3) adds an "ici" source with v5e-class
+inter-host bandwidth.
+
+Beyond the flat Fig-14 table, the model now carries *link state* for the
+adapter data plane (``repro.core.pool.AdapterStore``):
+
+* every peer-sourced transfer occupies the source server's egress link
+  until its ETA; concurrent transfers on one link divide bandwidth, so
+  ``plan_latency`` quotes a load-dependent figure and the store picks
+  the cheapest source instead of a hardcoded one;
+* ``remote_read_penalty`` prices the GDR *remote-read* access mode: a
+  request served from a peer's HBM copy streams adapter weights over
+  the fabric every iteration until the local copy warms. Reads overlap
+  compute (``remote_read_overlap``), so only the non-hidden fraction of
+  the wire time is charged — the Fig-14 "IB GDR ~ local host" economics
+  that make serving-before-migrating worthwhile.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict
+from typing import Dict, List, Optional, Tuple
 
 # bytes/s bandwidth and seconds of base latency per source
 _SOURCES: Dict[str, tuple] = {
@@ -24,13 +37,77 @@ _SOURCES: Dict[str, tuple] = {
 }
 
 
-@dataclasses.dataclass(frozen=True)
 class NetworkModel:
-    contention: float = 1.0     # >1 slows all transfers (shared links)
+    """Transfer latency + per-link contention state.
 
+    ``fabric`` names the peer-to-peer source ("ib_gdr" for the paper's
+    GPU clusters, "ici" for the TPU deployment mapping); ``contention``
+    is a global slowdown on all wire time (shared spine).
+    """
+
+    def __init__(self, contention: float = 1.0, fabric: str = "ib_gdr",
+                 remote_read_overlap: float = 0.6):
+        if fabric not in _SOURCES:
+            raise ValueError(f"unknown fabric {fabric!r}")
+        self.contention = contention
+        self.fabric = fabric
+        self.remote_read_overlap = remote_read_overlap
+        # src_server -> ETAs of transfers currently leaving that server
+        self._egress: Dict[int, List[float]] = {}
+
+    def sources(self):
+        return sorted(_SOURCES)
+
+    # -- flat Fig-14 latency (no link state) ----------------------------
     def transfer_latency(self, nbytes: int, source: str) -> float:
         bw, lat = _SOURCES[source]
         return lat + self.contention * nbytes / bw
 
-    def sources(self):
-        return sorted(_SOURCES)
+    # -- link state ------------------------------------------------------
+    def link_load(self, src_server: int, now: float = 0.0) -> int:
+        """Transfers currently in flight out of ``src_server``."""
+        etas = self._egress.get(src_server)
+        if not etas:
+            return 0
+        live = [t for t in etas if t > now + 1e-12]
+        self._egress[src_server] = live
+        return len(live)
+
+    def plan_latency(self, nbytes: int, source: str, now: float = 0.0,
+                     src_server: Optional[int] = None) -> float:
+        """Quoted latency for a transfer starting at ``now``: base wire
+        time scaled by how many transfers already share the source link
+        (fair-share bandwidth division)."""
+        if src_server is None:
+            return self.transfer_latency(nbytes, source)
+        bw, lat = _SOURCES[source]
+        load = self.link_load(src_server, now)
+        return lat + (1 + load) * self.contention * nbytes / bw
+
+    def begin_transfer(self, nbytes: int, source: str, now: float = 0.0,
+                       src_server: Optional[int] = None
+                       ) -> Tuple[float, float]:
+        """Start a transfer; returns (latency, eta) and — for peer
+        sources — occupies the source's egress link until the ETA."""
+        latency = self.plan_latency(nbytes, source, now, src_server)
+        eta = now + latency
+        if src_server is not None:
+            self._egress.setdefault(src_server, []).append(eta)
+        return latency, eta
+
+    def end_transfer(self, src_server: int, eta: float) -> None:
+        """Release the link slot of a completed transfer."""
+        etas = self._egress.get(src_server)
+        if etas and eta in etas:
+            etas.remove(eta)
+
+    # -- remote-read access mode ----------------------------------------
+    def remote_read_penalty(self, nbytes: int,
+                            source: Optional[str] = None) -> float:
+        """Per-iteration surcharge for executing with adapter weights
+        resident on a peer: the fabric streams the adapter's bytes each
+        iteration, overlapped with compute so only the non-hidden
+        fraction is charged on top of the iteration time."""
+        bw, lat = _SOURCES[source or self.fabric]
+        hidden = max(0.0, min(1.0, self.remote_read_overlap))
+        return lat + (1.0 - hidden) * self.contention * nbytes / bw

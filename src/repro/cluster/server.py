@@ -44,29 +44,41 @@ class SimServer:
         self.busy_time = 0.0
 
     # -- iteration costs (bank-layout aware) ------------------------------
-    def _prefill_cost(self, batch: List[SimRequest], tokens: int) -> float:
-        if self.bank_mode == "bucketed":
-            return self.model.prefill_time_bucketed(
-                _bucket_sums(batch, lambda r: r.prompt_len))
-        return self.model.prefill_time(tokens,
-                                       max(r.rank for r in batch))
+    def _remote_surcharge(self, reqs: List[SimRequest], now: float
+                          ) -> float:
+        """GDR remote-read tax: requests whose adapter still lives on a
+        peer (local warm copy lands at ``remote_until``) stream weights
+        over the fabric each iteration."""
+        return sum(r.remote_penalty for r in reqs
+                   if now < r.remote_until)
 
-    def _decode_cost(self, running: List[SimRequest]) -> float:
+    def _prefill_cost(self, batch: List[SimRequest], tokens: int,
+                      now: float = 0.0) -> float:
+        pen = self._remote_surcharge(batch, now)
         if self.bank_mode == "bucketed":
-            return self.model.decode_time_bucketed(
+            return pen + self.model.prefill_time_bucketed(
+                _bucket_sums(batch, lambda r: r.prompt_len))
+        return pen + self.model.prefill_time(tokens,
+                                             max(r.rank for r in batch))
+
+    def _decode_cost(self, running: List[SimRequest],
+                     now: float = 0.0) -> float:
+        pen = self._remote_surcharge(running, now)
+        if self.bank_mode == "bucketed":
+            return pen + self.model.decode_time_bucketed(
                 _bucket_sums(running, lambda r: 1))
-        return self.model.decode_time(len(running),
-                                      max(r.rank for r in running))
+        return pen + self.model.decode_time(len(running),
+                                            max(r.rank for r in running))
 
     # -- load introspection (used by Toppings routing) --------------------
     def estimated_work(self, now: float) -> float:
         """Seconds of outstanding work: queued prefills + remaining decode."""
         w = max(0.0, self.busy_until - now)
         for r in self.waiting:
-            w += self._prefill_cost([r], r.prompt_len)
+            w += self._prefill_cost([r], r.prompt_len, now)
         if self.running:
             remaining = max((r.output_len - r.decoded) for r in self.running)
-            w += remaining * self._decode_cost(self.running) / \
+            w += remaining * self._decode_cost(self.running, now) / \
                 max(1, len(self.running))
         return w
 
@@ -104,7 +116,7 @@ class SimServer:
                 batch.append(r)
                 tokens += r.prompt_len
             if batch:
-                t_iter = self._prefill_cost(batch, tokens)
+                t_iter = self._prefill_cost(batch, tokens, now)
                 end = now + t_iter
                 for r in batch:
                     self.waiting.remove(r)
@@ -120,7 +132,7 @@ class SimServer:
                 self.busy_until = end
                 return end
         if self.running:
-            t_iter = self._decode_cost(self.running)
+            t_iter = self._decode_cost(self.running, now)
             end = now + t_iter
             done = []
             for r in self.running:

@@ -1,10 +1,18 @@
 """Discrete-event cluster simulator: trace in, per-request TTFT/TBT out.
 
 Wires together the LORASERVE orchestrator (placement policy + routing
-table + distributed adapter pool + demand estimator) with a pool of
+table + tiered adapter store + demand estimator) with a pool of
 iteration-level SimServers, advancing time with a simple event loop.
 Rebalancing timesteps fire every `rebalance_period` seconds for dynamic
 policies (paper Fig 11 step 6-7).
+
+Adapter movement is asynchronous: a miss starts a transfer through the
+``AdapterStore`` that occupies link bandwidth until a "fetch" event
+completes it. ``access_mode="migrate"`` blocks the request until the
+copy lands (``ready = eta``); ``"remote-read"`` starts serving
+immediately from a peer's copy over GDR, paying a per-iteration penalty
+until the background warm fetch finishes. ``prefetch=True`` warms
+newly-placed copies at each rebalance instead of migrating lazily.
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ from typing import Dict, List, Optional
 
 from repro.core.baselines import POLICIES
 from repro.core.demand import DemandEstimator
-from repro.core.pool import DistributedAdapterPool
+from repro.core.pool import AdapterStore
 from repro.core.routing import RoutingTable
 from repro.core.types import AdapterInfo, PlacementContext
 
@@ -35,6 +43,10 @@ class SimResult:
     timed_out: int
     per_server_p95_ttft: List[float]
     warmup: float = 0.0     # requests arriving before this are excluded
+    # adapter data-plane telemetry
+    remote_reads: int = 0        # misses served via peer GDR reads
+    prefetches: int = 0          # rebalance-driven proactive warms
+    coalesced_fetches: int = 0   # duplicate fetches joined in flight
 
     def _eligible(self):
         return [r for r in self.requests if r.arrival >= self.warmup]
@@ -76,16 +88,23 @@ class ClusterSimulator:
                  timeout: float = 120.0,
                  warmup: float = 0.0,
                  seed: int = 0,
-                 bank_mode: str = "padded"):
+                 bank_mode: str = "padded",
+                 access_mode: str = "migrate",
+                 prefetch: bool = False,
+                 network: Optional[NetworkModel] = None):
+        if access_mode not in ("migrate", "remote-read"):
+            raise ValueError(f"unknown access_mode {access_mode!r}")
         self.warmup = warmup
         self.bank_mode = bank_mode
+        self.access_mode = access_mode
+        self.prefetch = prefetch
         self.n = n_servers
         self.adapters = adapters
         self.meta = {a.adapter_id: a for a in adapters}
         self.model = server_model or ServerModel()
         self.policy = POLICIES[policy]() if isinstance(policy, str) \
             else policy
-        self.network = NetworkModel()
+        self.network = network or NetworkModel()
         self.rebalance_period = rebalance_period
         self.timeout = timeout
         self.seed = seed
@@ -103,7 +122,7 @@ class ClusterSimulator:
             operating_points=self.operating_points)
         placement = self.policy.place(ctx)
         router = RoutingTable(placement, seed=self.seed)
-        pool = DistributedAdapterPool(self.n, self.adapters, self.network)
+        pool = AdapterStore(self.n, self.adapters, self.network)
         pool.seed(placement)
         max_adapters = pool.max_adapters_per_server()
         total_bytes = pool.total_bytes()
@@ -131,6 +150,11 @@ class ClusterSimulator:
                 heapq.heappush(heap, (max(t, now), seq, "server", s.sid))
                 seq += 1
 
+        def push_fetch(eta: float):
+            nonlocal seq
+            heapq.heappush(heap, (eta, seq, "fetch", None))
+            seq += 1
+
         now = 0.0
         while heap:
             now, _, kind, payload = heapq.heappop(heap)
@@ -141,21 +165,28 @@ class ClusterSimulator:
                               key=lambda i: servers[i].estimated_work(now))
                     router.request_counts[req.adapter_id] = \
                         router.request_counts.get(req.adapter_id, 0) + 1
+                    req.ready = now
+                    req.fetch_latency = 0.0
                 else:
-                    sid = router.route(req.adapter_id,
-                                       tokens=req.prompt_len +
-                                       req.output_len)
-                fetch_lat, _ = (0.0, 0) if self.policy.replicate_all else \
-                    pool.ensure_local(sid, req.adapter_id)
+                    sid, entry = router.route_detailed(
+                        req.adapter_id,
+                        tokens=req.prompt_len + req.output_len)
+                    plan = pool.plan_access(
+                        sid, req.adapter_id, now=now,
+                        access_mode=self.access_mode,
+                        preferred_peers=[s for s, _ in entry])
+                    req.apply_fetch_plan(plan, now)
+                    if not plan.hit:
+                        push_fetch(plan.eta)
                 req.server = sid
-                req.fetch_latency = fetch_lat
-                req.ready = now + fetch_lat
                 req.rank = self.meta[req.adapter_id].rank
                 servers[sid].enqueue(req)
                 window_tokens[req.adapter_id] = \
                     window_tokens.get(req.adapter_id, 0.0) + \
                     req.prompt_len + req.output_len
                 schedule_server(servers[sid], now)
+            elif kind == "fetch":
+                pool.poll(now)
             elif kind == "server":
                 s = servers[payload]
                 if s.busy_until > now + 1e-12:
@@ -187,7 +218,9 @@ class ClusterSimulator:
                     prev_placement=placement)
                 placement = self.policy.place(ctx)
                 router.update(placement)
-                pool.apply_placement(placement)
+                for p in pool.apply_placement(placement, now=now,
+                                              prefetch=self.prefetch):
+                    push_fetch(p.eta)
                 max_adapters = max(max_adapters,
                                    pool.max_adapters_per_server())
                 if heap:   # only keep rebalancing while work remains
@@ -219,6 +252,9 @@ class ClusterSimulator:
             timed_out=timed_out,
             per_server_p95_ttft=per_server,
             warmup=self.warmup,
+            remote_reads=pool.remote_reads,
+            prefetches=pool.prefetches,
+            coalesced_fetches=pool.coalesced,
         )
 
 

@@ -6,7 +6,7 @@ from .baselines import (ContiguousPolicy, LoraservePolicy, POLICIES,
 from .demand import DemandEstimator
 from .orchestrator import ClusterOrchestrator
 from .placement import assign_loraserve
-from .pool import DistributedAdapterPool
+from .pool import AdapterStore, DistributedAdapterPool, FetchPlan
 from .request import Phase, Request, ServeRequest, SimRequest
 from .routing import RoutingTable, UnknownAdapterError
 from .types import (AdapterInfo, Placement, PlacementContext,
@@ -15,6 +15,7 @@ from .types import (AdapterInfo, Placement, PlacementContext,
 __all__ = ["assign_loraserve", "AdapterInfo", "Placement",
            "PlacementContext", "PlacementStats", "DemandEstimator",
            "RoutingTable", "UnknownAdapterError",
+           "AdapterStore", "FetchPlan",
            "DistributedAdapterPool", "ClusterOrchestrator",
            "POLICIES", "LoraservePolicy", "RandomPolicy",
            "ContiguousPolicy", "ToppingsPolicy", "servers_to_adapters",

@@ -1,15 +1,22 @@
 """Cluster orchestrator facade (paper Fig 11): owns the placement policy,
-routing table, distributed adapter pool, and demand estimator. The
+routing table, tiered adapter store, and demand estimator. The
 discrete-event simulator drives it; ``launch/serve.py`` drives the same
 object against real JAX engines for the end-to-end example.
+
+The request path speaks ``FetchPlan``s: ``route_plan`` routes a request
+and asks the ``AdapterStore`` how its adapter will be served — a hit, a
+blocking migrate fetch (async, completing at ``plan.eta``), or a GDR
+remote read from a peer while the local copy warms (``access_mode=
+"remote-read"``). The legacy ``route`` keeps the old synchronous
+(server_id, latency) contract on top of the same store.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .baselines import POLICIES
 from .demand import DemandEstimator
-from .pool import DistributedAdapterPool
+from .pool import AdapterStore, FetchPlan
 from .routing import RoutingTable
 from .types import AdapterInfo, Placement, PlacementContext
 
@@ -17,13 +24,25 @@ from .types import AdapterInfo, Placement, PlacementContext
 class ClusterOrchestrator:
     def __init__(self, n_servers: int, adapters: List[AdapterInfo],
                  operating_points: Dict[int, float],
-                 policy: str = "loraserve", network=None, seed: int = 0):
+                 policy: str = "loraserve", network=None, seed: int = 0,
+                 access_mode: str = "migrate", prefetch: bool = False,
+                 sync_store: bool = True):
+        if access_mode not in ("migrate", "remote-read"):
+            raise ValueError(f"unknown access_mode {access_mode!r}")
+        # sync_store: legacy clock-less callers (route()/end_of_timestep
+        # with the default now=0.0) have no event loop to drive
+        # store.poll(); prefetch warms then complete synchronously so
+        # transfers cannot strand on links or pin GC. Async drivers
+        # (LoRAServeCluster) pass sync_store=False and poll themselves.
+        self.sync_store = sync_store
         self.n = n_servers
         self.adapters = adapters
         self.meta = {a.adapter_id: a for a in adapters}
         self.operating_points = operating_points
         self.policy = POLICIES[policy]() if isinstance(policy, str) \
             else policy
+        self.access_mode = access_mode
+        self.prefetch = prefetch
         self.demand = DemandEstimator()
         ctx = PlacementContext(
             n_servers=n_servers, adapters=adapters,
@@ -31,21 +50,51 @@ class ClusterOrchestrator:
             operating_points=operating_points)
         self.placement: Placement = self.policy.place(ctx)
         self.router = RoutingTable(self.placement, seed=seed)
-        self.pool = DistributedAdapterPool(n_servers, adapters, network)
-        self.pool.seed(self.placement)
+        # one AdapterStore; `pool` kept as the legacy name
+        self.store = self.pool = AdapterStore(n_servers, adapters,
+                                              network)
+        self.store.seed(self.placement)
         self._window_tokens: Dict[str, float] = {}
 
     # -- request path (Fig 11 steps 1-4) ----------------------------------
-    def route(self, adapter_id: str, tokens: float = 0.0):
-        """Returns (server_id, fetch_latency_seconds)."""
+    def route_plan(self, adapter_id: str, tokens: float = 0.0,
+                   now: float = 0.0) -> Tuple[int, FetchPlan]:
+        """Route a request and plan its adapter's data path. Returns
+        (server_id, FetchPlan); the plan is a hit, an async migrate
+        fetch, or a remote-read serve depending on residency and the
+        configured access mode."""
+        sid, entry = self.router.route_detailed(adapter_id, tokens)
+        # remote reads prefer peers the adapter is *placed* on
+        plan = self.store.plan_access(sid, adapter_id, now=now,
+                                      access_mode=self.access_mode,
+                                      preferred_peers=[s for s, _ in
+                                                       entry])
+        if self.sync_store:
+            # no event loop will poll(): complete the transfer now so
+            # it cannot strand on links or pin GC; the plan still
+            # carries the modeled latency/ETA for accounting
+            self.store.finish(plan)
+        self._window_tokens[adapter_id] = \
+            self._window_tokens.get(adapter_id, 0.0) + tokens
+        return sid, plan
+
+    def route(self, adapter_id: str, tokens: float = 0.0,
+              now: float = 0.0):
+        """Legacy synchronous path: returns (server_id,
+        fetch_latency_seconds); the fetch completes instantly. Callers
+        combining this path with ``prefetch=True`` should pass their
+        clock as ``now`` so background prefetch transfers (completed by
+        ``ensure_local``'s internal poll) land and release their
+        links."""
         sid = self.router.route(adapter_id, tokens)
-        lat, _ = self.pool.ensure_local(sid, adapter_id)
+        lat, _ = self.store.ensure_local(sid, adapter_id, now=now)
         self._window_tokens[adapter_id] = \
             self._window_tokens.get(adapter_id, 0.0) + tokens
         return sid, lat
 
     # -- control path (Fig 11 steps 6-7) -----------------------------------
-    def end_of_timestep(self, period_s: float) -> Placement:
+    def end_of_timestep(self, period_s: float,
+                        now: float = 0.0) -> Placement:
         for aid in self.meta:
             self.demand.observe(aid, self._window_tokens.get(aid, 0.0)
                                 / period_s)
@@ -58,5 +107,9 @@ class ClusterOrchestrator:
                 prev_placement=self.placement)
             self.placement = self.policy.place(ctx)
             self.router.update(self.placement)
-            self.pool.apply_placement(self.placement)
+            plans = self.store.apply_placement(self.placement, now=now,
+                                               prefetch=self.prefetch)
+            if self.sync_store:
+                for p in plans:
+                    self.store.finish(p)
         return self.placement

@@ -1,35 +1,103 @@
-"""Distributed adapter pool (paper §IV-B, Fig 13).
+"""Tiered adapter data plane (paper §IV-B, Fig 13/14).
 
-Each server stores in host memory only the adapters routed to it; the
-orchestrator keeps a cluster-wide location index. On a routing miss the
-adapter is fetched peer-to-peer (GPUDirect-RDMA over InfiniBand in the
-paper; ICI between TPU hosts in our deployment mapping) and cached
-locally; copies no longer referenced by the routing table are deleted
-after the fetch completes — while the invariant "every adapter lives on
->= 1 server" is preserved at all times.
+``AdapterStore`` replaces the old synchronous ``DistributedAdapterPool``
+API: adapter movement is a first-class subsystem with per-server tiers,
+explicit ``FetchPlan``s, and asynchronous in-flight transfers that
+occupy link bandwidth on the simulator clock.
+
+Tiers, per server:
+
+* **hbm** — the adapter sits in the server's bank slot and is servable
+  (``local`` / ``index`` track this tier; the cluster invariant "every
+  adapter lives on >= 1 server" is over HBM copies);
+* **host** — a bounded LRU host-memory cache holding copies recently
+  demoted from HBM (delete-after-copy GC demotes instead of dropping),
+  refetchable over PCIe at ``local_host`` cost;
+* **peer** — any other server's HBM copy, readable over the fabric
+  (GPUDirect RDMA / ICI);
+* **ssd** — a cluster-wide spill source (the paper's prohibitively
+  slow one) offered as an alternative when every other link is
+  congested; it is never a correctness backstop — an adapter with no
+  HBM or host copy left raises instead of silently serving from SSD.
+
+Data path: ``start_fetch`` picks the cheapest source *by modeled
+latency under current link load* (replacing ``src = min(holders)``),
+registers an in-flight transfer, and returns a ``FetchPlan`` whose
+``eta`` the caller turns into a fetch-completion event; ``poll``
+installs finished copies. Duplicate in-flight fetches of one adapter to
+one server coalesce onto the first transfer. ``start_remote_read``
+serves a miss from a peer's copy over GDR (per-iteration penalty from
+``NetworkModel``) while the local copy warms in the background, and
+``apply_placement(prefetch=True)`` proactively warms newly-placed
+copies instead of migrating lazily on first hit.
+
+GC (the Fig-13 delete-after-copy step) skips adapters with transfers in
+flight: a peer copy being read by an in-flight fetch must survive until
+that transfer lands.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Set, Tuple
 
 from .types import AdapterInfo, Placement
 
+TIER_HBM = "hbm"
+TIER_HOST = "host"
+TIER_PEER = "peer"
+TIER_SSD = "ssd"
 
-class DistributedAdapterPool:
+
+@dataclasses.dataclass
+class FetchPlan:
+    """One planned (or in-flight, or completed) adapter movement."""
+    adapter_id: str
+    dest: int
+    mode: str = "migrate"        # migrate | remote-read | prefetch
+    hit: bool = False            # already in the dest's HBM tier
+    source: str = TIER_HBM       # hbm | local_host | ib_gdr | ici | ssd
+    src_server: int = -1         # peer the bytes come from (-1: host/ssd)
+    nbytes: int = 0
+    latency: float = 0.0         # modeled transfer time (seconds)
+    eta: float = 0.0             # completion time on the caller's clock
+    token_penalty: float = 0.0   # per-iteration remote-read surcharge
+    read_peer: int = -1          # peer serving remote reads (remote-read)
+    coalesced: bool = False      # joined an already-in-flight transfer
+
+    @property
+    def blocking(self) -> bool:
+        """Whether the request must wait for the ETA before prefill."""
+        return not self.hit and self.mode != "remote-read"
+
+
+class AdapterStore:
     def __init__(self, n_servers: int, adapters: List[AdapterInfo],
-                 network=None):
+                 network=None, *, host_cache_bytes: int = 512 << 20,
+                 ssd_spill: bool = True):
         self.n_servers = n_servers
         self.meta: Dict[str, AdapterInfo] = {a.adapter_id: a
                                              for a in adapters}
+        # hbm tier: servable copies; the invariant is over these
         self.local: List[Set[str]] = [set() for _ in range(n_servers)]
         self.index: Dict[str, Set[int]] = {a.adapter_id: set()
                                            for a in adapters}
+        # host tier: LRU cache of demoted copies (aid -> nbytes)
+        self.host_cache: List[Dict[str, int]] = [dict()
+                                                 for _ in range(n_servers)]
+        self.host_cache_bytes = host_cache_bytes
+        self.ssd_spill = ssd_spill
         self.network = network
         self.desired: Dict[str, Set[int]] = {}
+        self._inflight: Dict[Tuple[int, str], FetchPlan] = {}
         # telemetry
         self.fetches = 0
         self.fetch_bytes = 0
         self.evictions = 0
+        self.remote_reads = 0
+        self.prefetches = 0
+        self.coalesced = 0
+        self.host_hits = 0
+        self.ssd_fetches = 0
 
     # -- initial seeding -----------------------------------------------
     def seed(self, placement: Placement) -> None:
@@ -39,37 +107,224 @@ class DistributedAdapterPool:
                 self.index[aid].add(sid)
         self.desired = {aid: set(entry) for aid, entry in placement.items()}
 
-    # -- placement updates (lazy migration, Fig 13) ---------------------
-    def apply_placement(self, placement: Placement) -> None:
-        """Record the new desired placement. Migration is lazy: adapters
-        move on first access; stale copies are GC'd then."""
-        self.desired = {aid: set(entry) for aid, entry in placement.items()}
+    # -- tier introspection ----------------------------------------------
+    def tier(self, server_id: int, adapter_id: str) -> Optional[str]:
+        if adapter_id in self.local[server_id]:
+            return TIER_HBM
+        if adapter_id in self.host_cache[server_id]:
+            return TIER_HOST
+        return None
 
-    # -- data path -------------------------------------------------------
-    def ensure_local(self, server_id: int, adapter_id: str
-                     ) -> Tuple[float, int]:
-        """Make `adapter_id` available on `server_id`. Returns
-        (fetch_latency_seconds, bytes_transferred); (0, 0) on a hit."""
+    def inflight_count(self, adapter_id: Optional[str] = None) -> int:
+        if adapter_id is None:
+            return len(self._inflight)
+        return sum(1 for (_, aid) in self._inflight if aid == adapter_id)
+
+    # -- placement updates (Fig 13; now with optional prefetch) ----------
+    def apply_placement(self, placement: Placement, now: float = 0.0,
+                        prefetch: bool = False) -> List[FetchPlan]:
+        """Record the new desired placement. Default is lazy migration
+        (adapters move on first access, stale copies GC'd then); with
+        ``prefetch=True`` newly-placed copies start warming immediately,
+        highest-phi routes first (link occupancy makes order matter).
+        Returns the prefetch plans started (empty when lazy)."""
+        self.desired = {aid: set(entry) for aid, entry in placement.items()}
+        if not prefetch:
+            return []
+        todo = sorted(((phi, aid, sid)
+                       for aid, entry in placement.items()
+                       for sid, phi in entry.items()
+                       if aid not in self.local[sid]),
+                      key=lambda t: (-t[0], t[1], t[2]))
+        plans = []
+        for _, aid, sid in todo:
+            p = self.start_fetch(sid, aid, now=now, mode="prefetch")
+            if not p.hit:
+                plans.append(p)
+        return plans
+
+    # -- source selection -------------------------------------------------
+    def _quote(self, nbytes: int, source: str, now: float,
+               src_server: Optional[int] = None) -> float:
+        if self.network is None:
+            return 0.0
+        return self.network.plan_latency(nbytes, source, now, src_server)
+
+    def _pick_source(self, dest: int, adapter_id: str, now: float
+                     ) -> Tuple[str, int, float]:
+        """Cheapest source under current link load: host cache beats an
+        idle peer link, a loaded peer link can lose to another peer (or
+        even SSD), replacing the old hardcoded ``min(holders)``."""
+        nbytes = self.meta[adapter_id].nbytes
+        fabric = self.network.fabric if self.network else "ib_gdr"
+        cands: List[Tuple[float, int, str, int]] = []
+        if adapter_id in self.host_cache[dest]:
+            cands.append((self._quote(nbytes, "local_host", now),
+                          0, "local_host", -1))
+        for p in sorted(self.index[adapter_id] - {dest}):
+            cands.append((self._quote(nbytes, fabric, now, p),
+                          1 + p, fabric, p))
+        if not cands:
+            # the SSD tier is a congestion alternative, never a
+            # correctness backstop: losing every HBM + host copy is an
+            # invariant breach and must stay loud
+            raise KeyError(f"adapter {adapter_id} lost from cluster")
+        if self.ssd_spill:
+            cands.append((self._quote(nbytes, "ssd", now),
+                          1_000_000, "ssd", -1))
+        lat, _, source, src = min(cands)
+        return source, src, lat
+
+    # -- async data path --------------------------------------------------
+    def start_fetch(self, server_id: int, adapter_id: str,
+                    now: float = 0.0, mode: str = "migrate") -> FetchPlan:
+        """Plan and start moving ``adapter_id`` to ``server_id``. Hits
+        return immediately; duplicate in-flight fetches coalesce onto
+        the existing transfer (same ETA, no extra link traffic)."""
         if adapter_id in self.local[server_id]:
             self._gc(adapter_id)
-            return 0.0, 0
-        holders = self.index[adapter_id]
-        if not holders:
-            raise KeyError(f"adapter {adapter_id} lost from cluster")
-        src = min(holders)          # deterministic; any holder works
+            return FetchPlan(adapter_id, server_id, mode=mode, hit=True,
+                             eta=now)
+        key = (server_id, adapter_id)
+        if key in self._inflight:
+            self.coalesced += 1
+            return dataclasses.replace(self._inflight[key], mode=mode,
+                                       coalesced=True)
         nbytes = self.meta[adapter_id].nbytes
-        latency = (self.network.transfer_latency(nbytes, "ib_gdr")
-                   if self.network else 0.0)
-        self.local[server_id].add(adapter_id)
-        self.index[adapter_id].add(server_id)
-        self.fetches += 1
-        self.fetch_bytes += nbytes
-        self._gc(adapter_id)
-        return latency, nbytes
+        source, src_server, _ = self._pick_source(server_id, adapter_id,
+                                                  now)
+        if self.network is None:
+            latency, eta = 0.0, now
+        else:
+            latency, eta = self.network.begin_transfer(
+                nbytes, source, now=now,
+                src_server=src_server if src_server >= 0 else None)
+        plan = FetchPlan(adapter_id, server_id, mode=mode, source=source,
+                         src_server=src_server, nbytes=nbytes,
+                         latency=latency, eta=eta)
+        self._inflight[key] = plan
+        # `fetches`/`fetch_bytes` stay miss-driven (their pre-data-plane
+        # meaning) so they compare across access modes; proactive warms
+        # are counted under `prefetches` only
+        if mode == "prefetch":
+            self.prefetches += 1
+        else:
+            self.fetches += 1
+            self.fetch_bytes += nbytes
+        if source == "local_host":
+            self.host_hits += 1
+        elif source == "ssd":
+            self.ssd_fetches += 1
+        return plan
 
+    def plan_access(self, server_id: int, adapter_id: str,
+                    now: float = 0.0, access_mode: str = "migrate",
+                    preferred_peers: Optional[List[int]] = None
+                    ) -> FetchPlan:
+        """The data-plane decision tree, shared by every substrate:
+        remote-read when configured and a peer can serve it, otherwise a
+        (possibly blocking) migrate fetch."""
+        if access_mode == "remote-read":
+            plan = self.start_remote_read(server_id, adapter_id, now=now,
+                                          preferred_peers=preferred_peers)
+            if plan is not None:
+                return plan
+        return self.start_fetch(server_id, adapter_id, now=now)
+
+    def start_remote_read(self, server_id: int, adapter_id: str,
+                          now: float = 0.0,
+                          preferred_peers: Optional[List[int]] = None
+                          ) -> Optional[FetchPlan]:
+        """Serve a miss by reading the adapter from a peer's HBM copy
+        over the fabric while the local copy warms in the background.
+        The returned plan is non-blocking: ``token_penalty`` is the
+        per-iteration surcharge until ``eta`` (warm-fetch completion).
+        Returns None when no peer holds a copy (caller falls back to a
+        blocking migrate fetch)."""
+        if adapter_id in self.local[server_id]:
+            self._gc(adapter_id)
+            return FetchPlan(adapter_id, server_id, mode="remote-read",
+                             hit=True, eta=now)
+        holders = sorted(self.index[adapter_id] - {server_id})
+        if not holders:
+            return None
+        prefs = [p for p in (preferred_peers or []) if p in holders]
+        pool = prefs or holders
+        if self.network is not None:
+            peer = min(pool, key=lambda p: (self.network.link_load(p, now),
+                                            p))
+            penalty = self.network.remote_read_penalty(
+                self.meta[adapter_id].nbytes)
+        else:
+            peer, penalty = pool[0], 0.0
+        warm = self.start_fetch(server_id, adapter_id, now=now,
+                                mode="remote-read")
+        self.remote_reads += 1
+        return dataclasses.replace(warm, mode="remote-read",
+                                   token_penalty=penalty, read_peer=peer)
+
+    def _complete(self, plan: FetchPlan) -> None:
+        """Install a finished transfer: HBM copy at the destination,
+        source link released, host-cache copy superseded."""
+        del self._inflight[(plan.dest, plan.adapter_id)]
+        if self.network is not None and plan.src_server >= 0:
+            self.network.end_transfer(plan.src_server, plan.eta)
+        self.local[plan.dest].add(plan.adapter_id)
+        self.index[plan.adapter_id].add(plan.dest)
+        self.host_cache[plan.dest].pop(plan.adapter_id, None)
+
+    def poll(self, now: float) -> List[FetchPlan]:
+        """Complete transfers whose ETA has passed: install the copy in
+        the destination's HBM tier, release the source link, and run the
+        (now unpinned) delete-after-copy GC."""
+        done = [p for p in self._inflight.values()
+                if p.eta <= now + 1e-12]
+        for p in done:
+            self._complete(p)
+        for p in done:
+            self._gc(p.adapter_id)
+        return done
+
+    def finish(self, plan: FetchPlan) -> None:
+        """Synchronously complete one in-flight transfer ahead of its
+        ETA (for clock-less legacy callers); no-op if already done."""
+        key = (plan.dest, plan.adapter_id)
+        if key in self._inflight:
+            self._complete(self._inflight[key])
+            self._gc(plan.adapter_id)
+
+    def next_event_time(self, now: float = 0.0) -> Optional[float]:
+        """Earliest future time a transfer can land; overdue (not yet
+        polled) transfers report ``now``."""
+        if not self._inflight:
+            return None
+        return max(min(p.eta for p in self._inflight.values()), now)
+
+    # -- sync compatibility shim ------------------------------------------
+    def ensure_local(self, server_id: int, adapter_id: str,
+                     now: float = 0.0) -> Tuple[float, int]:
+        """Legacy synchronous path: start the fetch and complete *that
+        transfer* immediately (other in-flight transfers keep their
+        ETAs; whatever is genuinely due by ``now`` is drained first).
+        Returns (fetch_latency_seconds, bytes); (0, 0) on a hit. A
+        coalesced fetch is charged only the remaining wait to the
+        in-flight transfer's ETA."""
+        self.poll(now)
+        plan = self.start_fetch(server_id, adapter_id, now=now)
+        if plan.hit:
+            return 0.0, 0
+        self.finish(plan)
+        return max(0.0, plan.eta - now), plan.nbytes
+
+    # -- GC (Fig 13 delete-after-copy) ------------------------------------
     def _gc(self, adapter_id: str) -> None:
         """Drop copies not in the desired placement, always keeping >= 1
-        copy cluster-wide (the paper's Fig 13 delete-after-copy step)."""
+        HBM copy cluster-wide. Skips adapters with transfers in flight:
+        an in-flight fetch may be reading any surviving copy, so nothing
+        is deleted until it lands (the hit-path GC races fixed here).
+        Demoted copies land in the host cache, not the void."""
+        if self.inflight_count(adapter_id):
+            return
         want = self.desired.get(adapter_id)
         if not want:
             return
@@ -81,11 +336,25 @@ class DistributedAdapterPool:
                 break
             self.local[sid].discard(adapter_id)
             holders.discard(sid)
+            self._demote(sid, adapter_id)
             self.evictions += 1
+
+    def _demote(self, server_id: int, adapter_id: str) -> None:
+        nbytes = self.meta[adapter_id].nbytes
+        if self.host_cache_bytes <= 0 or nbytes > self.host_cache_bytes:
+            return
+        cache = self.host_cache[server_id]
+        cache.pop(adapter_id, None)
+        cache[adapter_id] = nbytes          # most-recently demoted last
+        while sum(cache.values()) > self.host_cache_bytes:
+            cache.pop(next(iter(cache)))    # evict LRU head
 
     # -- accounting -------------------------------------------------------
     def server_bytes(self, server_id: int) -> int:
         return sum(self.meta[a].nbytes for a in self.local[server_id])
+
+    def host_cache_used(self, server_id: int) -> int:
+        return sum(self.host_cache[server_id].values())
 
     def server_adapter_count(self, server_id: int) -> int:
         return len(self.local[server_id])
@@ -98,3 +367,8 @@ class DistributedAdapterPool:
 
     def check_invariant(self) -> bool:
         return all(len(self.index[a]) >= 1 for a in self.meta)
+
+
+# Legacy name: the synchronous pool grew into the tiered store; callers
+# using seed/apply_placement/ensure_local/check_invariant are unchanged.
+DistributedAdapterPool = AdapterStore

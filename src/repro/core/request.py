@@ -41,12 +41,33 @@ class ServeRequest:
     server: int = -1
     decoded: int = 0
     fetch_latency: float = 0.0
+    # remote-read data plane: while the local copy warms (until
+    # `remote_until` on the backend clock) every iteration containing
+    # this request pays `remote_penalty` seconds of GDR weight streaming
+    remote_penalty: float = 0.0
+    remote_until: float = -1.0
     # real-engine lifecycle
     phase: Phase = Phase.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1                         # engine batch slot
     t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
+
+    def apply_fetch_plan(self, plan, now: float) -> None:
+        """Stamp readiness and remote-read fields from an
+        ``AdapterStore`` ``FetchPlan`` — the one plan-to-request mapping
+        both substrates use: hits and remote reads start immediately
+        (remote reads paying the per-iteration streaming tax until the
+        warm copy lands), migrate fetches block until the ETA."""
+        if plan.blocking:
+            self.fetch_latency = max(0.0, plan.eta - now)
+            self.ready = plan.eta
+        else:
+            self.ready = now
+            self.fetch_latency = 0.0
+            if not plan.hit:
+                self.remote_penalty = plan.token_penalty
+                self.remote_until = plan.eta
 
     @property
     def max_new_tokens(self) -> int:

@@ -52,6 +52,14 @@ class RoutingTable:
             raise UnknownAdapterError(adapter_id) from None
 
     def route(self, adapter_id: str, tokens: float = 0.0) -> int:
+        return self.route_detailed(adapter_id, tokens)[0]
+
+    def route_detailed(self, adapter_id: str, tokens: float = 0.0
+                       ) -> Tuple[int, List[Tuple[int, float]]]:
+        """Route plus the adapter's full phi entry. The alternates feed
+        the data plane's ``FetchPlan``: on a miss, a remote read prefers
+        peers the adapter is *placed* on (they are guaranteed warm and
+        phi-weighted), not just any current holder."""
         try:
             entry = self._table[adapter_id]
         except KeyError:
@@ -61,14 +69,14 @@ class RoutingTable:
         self.token_counts[adapter_id] = \
             self.token_counts.get(adapter_id, 0.0) + tokens
         if len(entry) == 1:
-            return entry[0][0]
+            return entry[0][0], list(entry)
         u = self._rng.random()
         acc = 0.0
         for sid, phi in entry:
             acc += phi
             if u <= acc:
-                return sid
-        return entry[-1][0]
+                return sid, list(entry)
+        return entry[-1][0], list(entry)
 
     def reset_counts(self) -> Dict[str, int]:
         counts = self.request_counts

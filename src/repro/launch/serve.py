@@ -26,7 +26,7 @@ import jax
 
 from repro.cluster import NetworkModel
 from repro.configs import get_smoke_config
-from repro.core import AdapterInfo, ServeRequest
+from repro.core import AdapterInfo, POLICIES, ServeRequest
 from repro.models import model as M
 from repro.serving import EngineBackend, LoRAServeCluster
 
@@ -61,12 +61,20 @@ def main():
     ap.add_argument("--adapters", type=int, default=8)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--policy", default="loraserve",
-                    choices=["loraserve", "slora-random",
-                             "slora-contiguous", "toppings"])
+                    choices=sorted(POLICIES))
     ap.add_argument("--bank-mode", default="padded",
                     choices=["padded", "bucketed"],
                     help="LoRA bank layout: max-rank padded (paper "
                          "baseline) or power-of-two rank buckets")
+    ap.add_argument("--access-mode", default="migrate",
+                    choices=["migrate", "remote-read"],
+                    help="on a placement miss: block on the adapter "
+                         "fetch (migrate) or serve immediately reading "
+                         "weights from a peer's copy over GDR while the "
+                         "local copy warms (remote-read)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="warm newly-placed adapters at each rebalance "
+                         "instead of migrating lazily on first hit")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--duration", type=float, default=6.0,
@@ -88,7 +96,8 @@ def main():
                             seed=args.seed, bank_mode=args.bank_mode)
     cluster = LoRAServeCluster(
         backend, adapters, policy=args.policy, network=NetworkModel(),
-        rebalance_period=args.rebalance_period, seed=args.seed)
+        rebalance_period=args.rebalance_period, seed=args.seed,
+        access_mode=args.access_mode, prefetch=args.prefetch)
     trace = build_trace(adapters, cfg, args.requests, args.prompt_len,
                         args.max_new, args.duration, args.seed)
     report = cluster.run(trace)
@@ -108,6 +117,10 @@ def main():
           f"placement_changed={report.placement_changed()} "
           f"pool_fetches={report.fetches} "
           f"max_adapters/server={report.max_adapters_per_server}")
+    print(f"access_mode={report.access_mode} "
+          f"remote_reads={report.remote_reads} "
+          f"prefetches={report.prefetches} "
+          f"coalesced_fetches={report.coalesced_fetches}")
     print("cluster drained OK")
 
 

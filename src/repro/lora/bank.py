@@ -85,6 +85,42 @@ class LoRABank:
         return jnp.stack([self.adapter_bucket[adapter_idx],
                           self.adapter_local[adapter_idx]], axis=-1)
 
+    # -- per-adapter weight access (GDR remote-read data plane) ----------
+    def _rows(self, adapter_id: str):
+        """(bank pytree holding the adapter, its stack row, its rank)."""
+        i = self.index(adapter_id)
+        r = self.ranks[i]
+        if self.mode == "padded":
+            return self.data, i, r
+        return (self.data[int(self.adapter_bucket[i])],
+                int(self.adapter_local[i]), r)
+
+    def get_adapter(self, adapter_id: str):
+        """Extract one adapter's unpadded weights
+        ``{target: {"A": (L, d, r), "B": (L, r, o)}}`` — what a peer
+        serves over GDR when this bank's copy is read remotely."""
+        tree, row, r = self._rows(adapter_id)
+        return {t: {"A": tree[t]["A"][:, row, :, :r],
+                    "B": tree[t]["B"][:, row, :r, :]}
+                for t in tree}
+
+    def set_adapter(self, adapter_id: str, weights) -> "LoRABank":
+        """Return a bank with ``adapter_id``'s rows overwritten by
+        ``weights`` (the peer-read install path; padding beyond the
+        adapter's rank is untouched and must stay zero)."""
+        tree, row, r = self._rows(adapter_id)
+        new = {t: {"A": tree[t]["A"].at[:, row, :, :r].set(
+                       weights[t]["A"]),
+                   "B": tree[t]["B"].at[:, row, :r, :].set(
+                       weights[t]["B"])}
+               for t in tree}
+        if self.mode == "padded":
+            return dataclasses.replace(self, data=new)
+        b = int(self.adapter_bucket[self.index(adapter_id)])
+        data = tuple(new if j == b else d
+                     for j, d in enumerate(self.data))
+        return dataclasses.replace(self, data=data)
+
 
 def build_bank(cfg, adapter_ranks: Dict[str, int], key, *,
                mode: str = "padded", n_layers=None,

@@ -64,12 +64,25 @@ class ServingBackend(Protocol):
     def load_adapters(self, server_id: int,
                       adapter_ranks: Dict[str, int]) -> None: ...
 
+    def load_adapter_remote(self, server_id: int, adapter_id: str,
+                            rank: int, peer_server: int) -> None:
+        """Make the adapter servable on ``server_id`` by reading its
+        weights from ``peer_server``'s copy (GDR remote read) instead of
+        loading locally; the copy stays marked remote until promoted."""
+        ...
+
+    def promote_adapter(self, server_id: int, adapter_id: str) -> None:
+        """Background warm fetch landed: the remote-read copy is now a
+        first-class local one."""
+        ...
+
     def evict_adapter(self, server_id: int, adapter_id: str) -> bool: ...
 
     def hosted_adapters(self, server_id: int) -> Dict[str, int]: ...
 
     def memory_profile(self) -> List[Dict[str, float]]:
-        """Per-server {n_adapters, max_rank, adapter_bytes, bank_mode}."""
+        """Per-server {n_adapters, max_rank, adapter_bytes, bank_mode,
+        n_remote}."""
         ...
 
 
@@ -93,6 +106,7 @@ class SimBackend:
         self.timeout = timeout
         self._nbytes = adapter_nbytes or {}
         self._hosted: List[Dict[str, int]] = [{} for _ in range(n_servers)]
+        self._remote: List[set] = [set() for _ in range(n_servers)]
         self._inflight: List[ServeRequest] = []
         self._completed: List[ServeRequest] = []
         self._timed_out: List[ServeRequest] = []
@@ -147,12 +161,24 @@ class SimBackend:
     def load_adapters(self, server_id: int,
                       adapter_ranks: Dict[str, int]) -> None:
         self._hosted[server_id].update(adapter_ranks)
+        self._remote[server_id] -= set(adapter_ranks)
+
+    def load_adapter_remote(self, server_id: int, adapter_id: str,
+                            rank: int, peer_server: int) -> None:
+        # virtual substrate: the cost model charges the GDR streaming
+        # tax via req.remote_penalty; here we just track residency
+        self._hosted[server_id][adapter_id] = rank
+        self._remote[server_id].add(adapter_id)
+
+    def promote_adapter(self, server_id: int, adapter_id: str) -> None:
+        self._remote[server_id].discard(adapter_id)
 
     def evict_adapter(self, server_id: int, adapter_id: str) -> bool:
         # refuse while the adapter still has requests on this server
         if any(r.adapter_id == adapter_id and r.server == server_id
                for r in self._inflight):
             return False
+        self._remote[server_id].discard(adapter_id)
         return self._hosted[server_id].pop(adapter_id, None) is not None
 
     def hosted_adapters(self, server_id: int) -> Dict[str, int]:
@@ -160,13 +186,14 @@ class SimBackend:
 
     def memory_profile(self) -> List[Dict[str, float]]:
         out = []
-        for hosted in self._hosted:
+        for sid, hosted in enumerate(self._hosted):
             out.append({
                 "n_adapters": len(hosted),
                 "max_rank": max(hosted.values()) if hosted else 0,
                 "adapter_bytes": sum(self._nbytes.get(a, 0)
                                      for a in hosted),
                 "bank_mode": self.bank_mode,
+                "n_remote": len(self._remote[sid]),
             })
         return out
 
@@ -200,6 +227,7 @@ class EngineBackend:
         self.timeout = timeout
         self._page_pool_factory = page_pool_factory
         self.engines: List[Optional[object]] = [None] * n_servers
+        self._remote: List[set] = [set() for _ in range(n_servers)]
         self._t0 = time.monotonic()
         self._timed_out: List[ServeRequest] = []
 
@@ -280,9 +308,39 @@ class EngineBackend:
         else:
             self.engines[server_id].load_adapters(adapter_ranks)
 
+    def load_adapter_remote(self, server_id: int, adapter_id: str,
+                            rank: int, peer_server: int) -> None:
+        """GDR remote read on the real substrate: the adapter's weights
+        are pulled out of the *peer engine's* bank and installed into
+        this server's bank without local materialization. Falls back to
+        a local load when the peer copy is unavailable."""
+        weights = None
+        if 0 <= peer_server < self.n_servers:
+            peer = self.engines[peer_server]
+            if peer is not None and adapter_id in peer.adapter_ranks:
+                weights = peer.adapter_weights(adapter_id)
+        eng = self.engines[server_id]
+        if eng is None:
+            self.load_adapters(server_id, {adapter_id: rank})
+            eng = self.engines[server_id]
+            if weights is not None:
+                eng.install_adapter(adapter_id, rank, weights)
+        else:
+            eng.install_adapter(adapter_id, rank, weights)
+        if weights is not None:
+            self._remote[server_id].add(adapter_id)
+
+    def promote_adapter(self, server_id: int, adapter_id: str) -> None:
+        self._remote[server_id].discard(adapter_id)
+
     def evict_adapter(self, server_id: int, adapter_id: str) -> bool:
         eng = self.engines[server_id]
-        return False if eng is None else eng.evict_adapter(adapter_id)
+        if eng is None:
+            return False
+        if eng.evict_adapter(adapter_id):
+            self._remote[server_id].discard(adapter_id)
+            return True
+        return False
 
     def hosted_adapters(self, server_id: int) -> Dict[str, int]:
         eng = self.engines[server_id]
@@ -291,14 +349,16 @@ class EngineBackend:
     def memory_profile(self) -> List[Dict[str, float]]:
         from repro.lora.adapter import bank_nbytes
         out = []
-        for eng in self.engines:
+        for sid, eng in enumerate(self.engines):
             if eng is None:
                 out.append({"n_adapters": 0, "max_rank": 0,
                             "adapter_bytes": 0,
-                            "bank_mode": self.bank_mode})
+                            "bank_mode": self.bank_mode,
+                            "n_remote": 0})
             else:
                 out.append({"n_adapters": len(eng.adapter_ids),
                             "max_rank": eng.max_rank,
                             "adapter_bytes": bank_nbytes(eng.bank),
-                            "bank_mode": eng.bank_mode})
+                            "bank_mode": eng.bank_mode,
+                            "n_remote": len(self._remote[sid])})
         return out

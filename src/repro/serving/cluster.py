@@ -1,18 +1,25 @@
 """LoRAServeCluster: one serving facade over either execution substrate.
 
 Owns the paper's control plane (``ClusterOrchestrator``: placement
-policy, phi-weighted routing table, distributed adapter pool, demand
+policy, phi-weighted routing table, tiered adapter store, demand
 estimator) and drives a ``ServingBackend`` (simulated or real-JAX) on a
 shared clock:
 
-* arrivals are phi-routed (Fig 11 steps 1-2) and the adapter is pulled
-  through the distributed pool + the backend's ``load_adapters`` before
-  submission (steps 3-4);
+* arrivals are phi-routed (Fig 11 steps 1-2) and the adapter's data
+  path comes back as a ``FetchPlan`` from the tiered ``AdapterStore``
+  (steps 3-4): a hit, an asynchronous migrate fetch the request waits
+  out, or — with ``access_mode="remote-read"`` — an immediate serve
+  reading weights from a peer's copy over GDR while the local copy
+  warms in the background;
 * every ``rebalance_period`` seconds the demand window closes and
   ``end_of_timestep`` re-places adapters (steps 6-7) *while requests are
-  in flight*: the routing table and pool are re-seeded mid-run, idle
-  adapters are evicted from server banks, and subsequent requests follow
-  the updated phi;
+  in flight*: the routing table and store are re-seeded mid-run, idle
+  adapters are evicted from server banks, subsequent requests follow
+  the updated phi, and with ``prefetch=True`` newly-placed copies start
+  warming immediately instead of migrating lazily on first hit;
+* the run loop polls the store each tick so fetch completions install
+  copies, promote remote-read serves, and push prefetched adapters into
+  backend banks;
 * completions stream back as ``ServeResult`` records through one
   ``MetricsCollector`` regardless of backend.
 
@@ -64,6 +71,11 @@ class ClusterReport:
     memory_profile: List[dict]
     warmup: float = 0.0
     bank_mode: str = "padded"          # bank layout the backend ran with
+    # adapter data-plane telemetry
+    access_mode: str = "migrate"       # migrate | remote-read
+    remote_reads: int = 0              # misses served via peer GDR reads
+    prefetches: int = 0                # rebalance-driven proactive warms
+    coalesced_fetches: int = 0         # duplicate fetches joined in flight
 
     def _eligible(self) -> List[ServeResult]:
         return [r for r in self.results
@@ -105,7 +117,8 @@ class LoRAServeCluster:
                  adapters: List[AdapterInfo], *,
                  policy: str = "loraserve", network=None,
                  rebalance_period: float = 15.0, warmup: float = 0.0,
-                 seed: int = 0, operating_points=None, server_model=None):
+                 seed: int = 0, operating_points=None, server_model=None,
+                 access_mode: str = "migrate", prefetch: bool = False):
         if operating_points is None:
             from repro.cluster.costmodel import (ServerModel,
                                                  profile_operating_points)
@@ -116,9 +129,11 @@ class LoRAServeCluster:
         self.meta = {a.adapter_id: a for a in adapters}
         self.rebalance_period = rebalance_period
         self.warmup = warmup
+        self.access_mode = access_mode
         self.orch = ClusterOrchestrator(
             backend.n_servers, adapters, operating_points, policy=policy,
-            network=network, seed=seed)
+            network=network, seed=seed, access_mode=access_mode,
+            prefetch=prefetch, sync_store=False)
         self.metrics = MetricsCollector()
         self.placements: List[Placement] = [
             copy.deepcopy(self.orch.placement)]
@@ -129,10 +144,10 @@ class LoRAServeCluster:
         self._timed_out: List[ServeRequest] = []
         self._ran = False
         self._seed_backend()
-        # running peaks across rebalances (the pool GCs lazily, so the
+        # running peaks across rebalances (the store GCs lazily, so the
         # end-of-run state understates what a server actually held)
-        self._max_adapters = self.orch.pool.max_adapters_per_server()
-        self._total_bytes = self.orch.pool.total_bytes()
+        self._max_adapters = self.orch.store.max_adapters_per_server()
+        self._total_bytes = self.orch.store.total_bytes()
 
     # -- placement -> backend sync --------------------------------------
     def _seed_backend(self) -> None:
@@ -148,20 +163,40 @@ class LoRAServeCluster:
         if self.orch.policy.replicate_all:
             sid = min(range(self.backend.n_servers),
                       key=lambda i: self.backend.server_load(i, now))
-            fetch = 0.0
+            req.fetch_latency = 0.0
+            self.backend.load_adapters(sid, {aid: req.rank})
         else:
-            sid, fetch = self.orch.route(
-                aid, tokens=req.prompt_len + req.output_len)
-        req.fetch_latency = fetch
-        self.backend.load_adapters(sid, {aid: req.rank})
+            sid, plan = self.orch.route_plan(
+                aid, tokens=req.prompt_len + req.output_len, now=now)
+            req.apply_fetch_plan(plan, now)
+            if plan.hit or plan.blocking:
+                self.backend.load_adapters(sid, {aid: req.rank})
+            else:
+                # serve immediately from the peer copy; the warm fetch
+                # promotes it at plan.eta
+                self.backend.load_adapter_remote(sid, aid, req.rank,
+                                                 plan.read_peer)
         self.backend.submit(sid, req, now)
         self.per_server_counts[sid] += 1
         self.routed[req.req_id] = sid
 
+    def _poll_store(self, now: float) -> None:
+        """Drain adapter-store fetch completions: install prefetched
+        copies in backend banks and promote remote-read serves. The
+        promote is unconditional (a no-op discard for non-remote
+        copies) because a remote-read serve may have coalesced onto a
+        transfer that started as a prefetch or migrate fetch."""
+        for plan in self.orch.store.poll(now):
+            aid = plan.adapter_id
+            if plan.mode == "prefetch":
+                self.backend.load_adapters(
+                    plan.dest, {aid: self.meta[aid].rank})
+            self.backend.promote_adapter(plan.dest, aid)
+
     # -- control path (Fig 11 steps 6-7), mid-flight --------------------
-    def _rebalance(self, period: float) -> None:
+    def _rebalance(self, period: float, now: float) -> None:
         prev = self.placements[-1]
-        new = self.orch.end_of_timestep(max(period, 1e-9))
+        new = self.orch.end_of_timestep(max(period, 1e-9), now=now)
         self.rebalances += 1
         if new != prev:
             self.placements.append(copy.deepcopy(new))
@@ -176,9 +211,9 @@ class LoRAServeCluster:
                     self.backend.evict_adapter(sid, aid)
         # newly placed adapters load lazily on their first routed request
         self._max_adapters = max(self._max_adapters,
-                                 self.orch.pool.max_adapters_per_server())
+                                 self.orch.store.max_adapters_per_server())
         self._total_bytes = max(self._total_bytes,
-                                self.orch.pool.total_bytes())
+                                self.orch.store.total_bytes())
 
     # -- run loop --------------------------------------------------------
     def run(self, trace: List[ServeRequest], *,
@@ -196,11 +231,12 @@ class LoRAServeCluster:
         next_reb = self.rebalance_period if dynamic else float("inf")
         i = 0
         for _ in range(max_steps):
+            self._poll_store(now)
             while i < n and trace[i].arrival <= now + 1e-12:
                 self._dispatch(trace[i], now)
                 i += 1
             if dynamic and now + 1e-12 >= next_reb:
-                self._rebalance(now - last_reb)
+                self._rebalance(now - last_reb, now)
                 last_reb = now
                 next_reb = now + self.rebalance_period
             self.backend.step(now)
@@ -222,11 +258,18 @@ class LoRAServeCluster:
                 t = self.backend.next_event_time(now)
                 if t is not None:
                     cands.append(t)
+                t = self.orch.store.next_event_time(now)
+                if t is not None:
+                    cands.append(t)
                 if dynamic and (i < n or self.backend.pending()):
                     cands.append(next_reb)
                 if not cands:
                     break           # nothing can ever happen again
                 now = max(now, min(cands))
+        # drain trailing transfers (warm fetches/prefetches still in
+        # flight when the last request finished) so the report's bank
+        # and remote-residency state is consistent
+        self._poll_store(float("inf"))
         return self._report(trace)
 
     def _report(self, trace: List[ServeRequest]) -> ClusterReport:
@@ -241,15 +284,15 @@ class LoRAServeCluster:
                 tbt=r.tbt if finished else None,
                 fetch_latency=r.fetch_latency,
                 n_output=len(r.output) if r.output else r.decoded))
-        pool = self.orch.pool
+        store = self.orch.store
         if self.orch.policy.replicate_all:
             max_adapters = len(self.adapters)
             total_bytes = sum(a.nbytes for a in self.adapters) \
                 * self.backend.n_servers
         else:
             max_adapters = max(self._max_adapters,
-                               pool.max_adapters_per_server())
-            total_bytes = max(self._total_bytes, pool.total_bytes())
+                               store.max_adapters_per_server())
+            total_bytes = max(self._total_bytes, store.total_bytes())
         return ClusterReport(
             results=results,
             summary=self.metrics.summary(),
@@ -257,11 +300,15 @@ class LoRAServeCluster:
             placements=self.placements,
             per_server_counts=list(self.per_server_counts),
             timed_out=len(self._timed_out),
-            fetches=pool.fetches,
-            fetch_bytes=pool.fetch_bytes,
+            fetches=store.fetches,
+            fetch_bytes=store.fetch_bytes,
             max_adapters_per_server=max_adapters,
             total_adapter_bytes=total_bytes,
             memory_profile=self.backend.memory_profile(),
             warmup=self.warmup,
             bank_mode=getattr(self.backend, "bank_mode", "padded"),
+            access_mode=self.access_mode,
+            remote_reads=store.remote_reads,
+            prefetches=store.prefetches,
+            coalesced_fetches=store.coalesced,
         )

@@ -121,6 +121,27 @@ class ServingEngine:
         self._rebuild_bank({**self.adapter_ranks, **new})
         return True
 
+    # -- GDR remote-read data plane --------------------------------------
+    def adapter_weights(self, adapter_id: str):
+        """Serve one adapter's unpadded weights to a peer (what a GDR
+        remote read against this server's bank returns)."""
+        return self.lora_bank.get_adapter(adapter_id)
+
+    def install_adapter(self, adapter_id: str, rank: int,
+                        weights=None) -> bool:
+        """Make ``adapter_id`` servable using weights read from a peer's
+        bank instead of (re)materializing them locally: the bank is
+        reshaped to make room, then the adapter's rows are overwritten
+        with the peer bytes. With ``weights=None`` this degrades to a
+        plain ``load_adapters`` (local materialization). Returns True if
+        the bank was rebuilt."""
+        added = self.load_adapters({adapter_id: rank})
+        if weights is not None:
+            self.lora_bank = self.lora_bank.set_adapter(adapter_id,
+                                                        weights)
+            self.bank = self.lora_bank.data
+        return added
+
     def evict_adapter(self, adapter_id: str) -> bool:
         """Drop an adapter from the bank. Refuses (returns False) while
         the adapter still has queued or co-batched requests, or if it is
