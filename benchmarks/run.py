@@ -11,12 +11,14 @@ import os
 import sys
 import time
 
-from . import (bench_ablation, bench_interference, bench_kernel,
-               bench_placement, bench_rank_skew, bench_roofline,
-               bench_scalability, bench_transfer, bench_workloads)
+from . import (bench_ablation, bench_autoscale, bench_interference,
+               bench_kernel, bench_placement, bench_rank_skew,
+               bench_roofline, bench_scalability, bench_transfer,
+               bench_workloads)
 from .common import fmt_rows
 
 BENCHES = {
+    "autoscale": bench_autoscale.run,
     "interference": lambda fast: bench_interference.run(),
     "transfer": bench_transfer.run,
     "kernel": lambda fast: bench_kernel.run(),

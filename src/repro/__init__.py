@@ -1,8 +1,9 @@
 """LORASERVE reproduction — rank- and demand-aware LoRA adapter placement
 and routing for distributed LLM inference, as a full JAX framework.
 
-Subpackages: core (the paper's contribution), cluster (simulator +
-calibrated cost model), serving (real JAX engine), lora, kernels (Pallas
-SGMV), models (10-arch zoo), training, data, configs, launch, traces.
+Subpackages: core (the paper's contribution), controlplane (drift
+detection + SLO-driven autoscaling), cluster (simulator + calibrated
+cost model), serving (real JAX engine), lora, kernels (Pallas SGMV),
+models (10-arch zoo), training, data, configs, launch, traces.
 """
 __version__ = "1.0.0"

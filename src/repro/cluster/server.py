@@ -38,6 +38,8 @@ class SimServer:
         self.bank_mode = bank_mode
         self.waiting: List[SimRequest] = []
         self.running: List[SimRequest] = []
+        self.finished: List[SimRequest] = []   # completion feed; the
+        # event loop drains this into telemetry/SLO trackers
         self.busy_until: float = 0.0
         self.iterations = 0
         self.prefill_tokens = 0
@@ -124,6 +126,7 @@ class SimServer:
                     r.decoded = 1        # first token out of prefill
                     if r.output_len <= 1:
                         r.finish = end
+                        self.finished.append(r)
                     else:
                         self.running.append(r)
                 self.iterations += 1
@@ -142,6 +145,7 @@ class SimServer:
                     done.append(r)
             for r in done:
                 self.running.remove(r)
+            self.finished.extend(done)
             self.iterations += 1
             self.busy_time += t_iter
             self.busy_until = end

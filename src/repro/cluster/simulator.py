@@ -13,12 +13,21 @@ copy lands (``ready = eta``); ``"remote-read"`` starts serving
 immediately from a peer's copy over GDR, paying a per-iteration penalty
 until the background warm fetch finishes. ``prefetch=True`` warms
 newly-placed copies at each rebalance instead of migrating lazily.
+
+With a ``ClusterController`` attached the fleet itself becomes dynamic:
+"ctick" events on the event clock feed windowed telemetry into the
+drift detector and SLO tracker, and the returned actions provision new
+``SimServer``s (after ``provision_delay``), drain servers (placement
+re-solved without them, holdings migrated out through the store, no new
+routes), and retire emptied ones. ``SimResult.gpu_seconds`` bills each
+server from provisioning to retirement (or end of run) — the paper's
+fewer-GPUs-under-SLO metric.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 from repro.core.baselines import POLICIES
 from repro.core.demand import DemandEstimator
@@ -47,6 +56,15 @@ class SimResult:
     remote_reads: int = 0        # misses served via peer GDR reads
     prefetches: int = 0          # rebalance-driven proactive warms
     coalesced_fetches: int = 0   # duplicate fetches joined in flight
+    # control-plane telemetry (controller runs only)
+    scale_ups: int = 0
+    drains: int = 0
+    retires: int = 0
+    controller_rebalances: int = 0   # out-of-band (drift/SLO) rebalances
+    gpu_seconds: float = 0.0         # sum over servers of billed time
+    final_servers: int = 0           # active fleet size at end of run
+    drift_events: List = dataclasses.field(default_factory=list)
+    actions: List = dataclasses.field(default_factory=list)
 
     def _eligible(self):
         return [r for r in self.requests if r.arrival >= self.warmup]
@@ -79,6 +97,19 @@ class SimResult:
     def meets_slo(self, slo_ttft: float) -> bool:
         return self.timed_out == 0 and self.p95_ttft() <= slo_ttft
 
+    def slo_attainment(self, slo_ttft: float) -> float:
+        """Fraction of eligible requests finishing prefill within the
+        TTFT target; dropped/unfinished requests count as misses."""
+        elig = self._eligible()
+        if not elig:
+            return 1.0
+        ok = sum(1 for r in elig
+                 if r.prefill_done >= 0 and r.ttft <= slo_ttft)
+        return ok / len(elig)
+
+    def gpu_hours(self) -> float:
+        return self.gpu_seconds / 3600.0
+
 
 class ClusterSimulator:
     def __init__(self, n_servers: int, adapters: List[AdapterInfo],
@@ -91,10 +122,16 @@ class ClusterSimulator:
                  bank_mode: str = "padded",
                  access_mode: str = "migrate",
                  prefetch: bool = False,
-                 network: Optional[NetworkModel] = None):
+                 network: Optional[NetworkModel] = None,
+                 controller=None,
+                 provision_delay: float = 0.0):
         if access_mode not in ("migrate", "remote-read"):
             raise ValueError(f"unknown access_mode {access_mode!r}")
         self.warmup = warmup
+        # closed-loop control plane (repro.controlplane): fed telemetry
+        # on the event clock, may grow/drain/retire the fleet mid-run
+        self.controller = controller
+        self.provision_delay = provision_delay
         self.bank_mode = bank_mode
         self.access_mode = access_mode
         self.prefetch = prefetch
@@ -114,6 +151,21 @@ class ClusterSimulator:
     def run(self, trace: List[SimRequest]) -> SimResult:
         servers = [SimServer(i, self.model, bank_mode=self.bank_mode)
                    for i in range(self.n)]
+        ctrl = self.controller
+        if ctrl is not None:   # lazy: keeps controller-less sims light
+            from repro.controlplane import ClusterState
+            # hand the controller the paper's capacity model so its
+            # drain gate can run Algorithm-1 demand math
+            if ctrl.operating_points is None:
+                ctrl.operating_points = self.operating_points
+            if not ctrl.adapter_ranks:
+                ctrl.adapter_ranks = {a.adapter_id: a.rank
+                                      for a in self.adapters}
+        active: Set[int] = set(range(self.n))      # serving servers
+        draining: Set[int] = set()                 # emptying, no routes
+        provisioned_at: Dict[int, float] = {i: 0.0 for i in range(self.n)}
+        retired_at: Dict[int, float] = {}
+        prev_busy: Dict[int, float] = {}    # ctick utilization baseline
         demand = DemandEstimator()
         # initial placement from uniform demand prior
         ctx = PlacementContext(
@@ -129,18 +181,26 @@ class ClusterSimulator:
 
         trace = sorted(trace, key=lambda r: r.arrival)
         window_tokens: Dict[str, float] = {}
-        next_rebalance = self.rebalance_period
         rebalances = 0
+        ctrl_rebalances = 0
+        scale_ups = drains = retires = 0
         timed_out = 0
+        last_rb = 0.0
 
         # event heap entries: (time, seq, kind, payload)
         heap: list = []
         seq = 0
+        remaining_arrivals = len(trace)
         for r in trace:
             heapq.heappush(heap, (r.arrival, seq, "arrival", r))
             seq += 1
         if self.policy.dynamic:
-            heapq.heappush(heap, (next_rebalance, seq, "rebalance", None))
+            heapq.heappush(heap, (self.rebalance_period, seq,
+                                  "rebalance", None))
+            seq += 1
+        if ctrl is not None:
+            heapq.heappush(heap, (ctrl.config.tick_period, seq,
+                                  "ctick", None))
             seq += 1
 
         def schedule_server(s: SimServer, now: float):
@@ -150,18 +210,115 @@ class ClusterSimulator:
                 heapq.heappush(heap, (max(t, now), seq, "server", s.sid))
                 seq += 1
 
-        def push_fetch(eta: float):
+        def push(t: float, kind: str, payload=None):
             nonlocal seq
-            heapq.heappush(heap, (eta, seq, "fetch", None))
+            heapq.heappush(heap, (t, seq, kind, payload))
             seq += 1
 
+        def push_fetch(eta: float):
+            push(eta, "fetch")
+
+        def work_remains() -> bool:
+            """Whether recurring events (rebalance/ctick) should keep
+            firing: arrivals still due, requests in flight, or adapter
+            transfers on the wire. (`if heap:` is not enough once two
+            recurring events coexist — they would sustain each other
+            forever.)"""
+            return (remaining_arrivals > 0
+                    or any(s.waiting or s.running for s in servers)
+                    or pool.inflight_count() > 0)
+
+        def feed_completions():
+            """Drain per-server completion feeds into the controller,
+            stamped at the request's own finish time."""
+            for s in servers:
+                if not s.finished:
+                    continue
+                if ctrl is not None:
+                    for r in s.finished:
+                        ctrl.observe_completion(r, r.finish)
+                s.finished.clear()
+
+        def do_rebalance(now: float):
+            """Close the demand window and re-solve placement over the
+            currently-active fleet (paper Fig 11 steps 6-7, on whatever
+            servers the control plane has left us). A second call at the
+            same instant (controller rebalance coinciding with the
+            periodic one, or rebalance+drain in one tick) re-solves but
+            must not feed a spurious zero-demand sample."""
+            nonlocal last_rb, max_adapters, placement
+            period = now - last_rb
+            if period > 1e-9:
+                for aid in self.meta:
+                    demand.observe(aid,
+                                   window_tokens.get(aid, 0.0) / period)
+                window_tokens.clear()
+                last_rb = now
+            placeable = sorted(active)
+            ctx = PlacementContext(
+                n_servers=len(placeable), adapters=self.adapters,
+                demand_tps=demand.demands(list(self.meta)),
+                operating_points=self.operating_points,
+                prev_placement=placement, server_ids=placeable)
+            placement = self.policy.place(ctx)
+            router.update(placement)
+            for p in pool.apply_placement(placement, now=now,
+                                          prefetch=self.prefetch):
+                push_fetch(p.eta)
+            max_adapters = max(max_adapters,
+                               pool.max_adapters_per_server())
+
+        def drained_servers(now: float) -> List[int]:
+            """Draining servers that are now empty: no queued/running
+            work, no HBM copies, not feeding or receiving transfers."""
+            out = []
+            for sid in sorted(draining):
+                s = servers[sid]
+                if s.waiting or s.running:
+                    continue
+                if pool.server_adapter_count(sid) or \
+                        pool.inflight_from(sid) or pool.inflight_to(sid):
+                    continue
+                out.append(sid)
+            return out
+
+        def execute(actions, now: float):
+            nonlocal ctrl_rebalances, scale_ups, drains, retires
+            for a in actions:
+                if a.kind == "rebalance":
+                    ctrl_rebalances += 1
+                    do_rebalance(now)
+                elif a.kind == "scale-up":
+                    scale_ups += 1
+                    # billed from the request; serving from provision
+                    push(now + self.provision_delay, "provision", now)
+                elif a.kind == "drain":
+                    drains += 1
+                    active.discard(a.server)
+                    draining.add(a.server)
+                    do_rebalance(now)       # re-place without the victim
+                    for p in pool.drain_server(a.server, now):
+                        push_fetch(p.eta)
+                elif a.kind == "retire":
+                    retires += 1
+                    pool.retire_server(a.server)
+                    router.block_server(a.server)
+                    draining.discard(a.server)
+                    retired_at[a.server] = now
+
         now = 0.0
+        last_activity = 0.0
         while heap:
             now, _, kind, payload = heapq.heappop(heap)
+            if kind == "provision" and not work_remains():
+                continue    # run drained while the server booted:
+                #             nothing to serve, nothing to bill
+            last_activity = now
             if kind == "arrival":
                 req: SimRequest = payload
+                remaining_arrivals -= 1
                 if self.policy.replicate_all:
-                    sid = min(range(self.n),
+                    sid = min(sorted(active),
                               key=lambda i: servers[i].estimated_work(now))
                     router.request_counts[req.adapter_id] = \
                         router.request_counts.get(req.adapter_id, 0) + 1
@@ -181,53 +338,70 @@ class ClusterSimulator:
                 req.server = sid
                 req.rank = self.meta[req.adapter_id].rank
                 servers[sid].enqueue(req)
+                tokens = req.prompt_len + req.output_len
                 window_tokens[req.adapter_id] = \
-                    window_tokens.get(req.adapter_id, 0.0) + \
-                    req.prompt_len + req.output_len
+                    window_tokens.get(req.adapter_id, 0.0) + tokens
+                if ctrl is not None:
+                    ctrl.observe_arrival(req.adapter_id, sid, tokens, now)
                 schedule_server(servers[sid], now)
             elif kind == "fetch":
                 pool.poll(now)
             elif kind == "server":
                 s = servers[payload]
                 if s.busy_until > now + 1e-12:
-                    heapq.heappush(heap, (s.busy_until, seq, "server", s.sid))
-                    seq += 1
+                    push(s.busy_until, "server", s.sid)
                     continue
                 # drop timed-out waiting requests
                 for r in list(s.waiting):
                     if now - r.arrival > self.timeout:
                         s.waiting.remove(r)
                         timed_out += 1
+                        if ctrl is not None:
+                            ctrl.observe_timeout(now)
                 if s.has_work(now):
                     end = s.step(now)
+                    feed_completions()
                     if end > now or s.waiting or s.running:
-                        heapq.heappush(heap, (end, seq, "server", s.sid))
-                        seq += 1
+                        push(end, "server", s.sid)
                 else:
                     schedule_server(s, now + 1e-9) if s.waiting else None
             elif kind == "rebalance":
                 rebalances += 1
-                for aid in self.meta:
-                    tps = window_tokens.get(aid, 0.0) / self.rebalance_period
-                    demand.observe(aid, tps)
-                window_tokens = {}
-                ctx = PlacementContext(
-                    n_servers=self.n, adapters=self.adapters,
-                    demand_tps=demand.demands(list(self.meta)),
-                    operating_points=self.operating_points,
-                    prev_placement=placement)
-                placement = self.policy.place(ctx)
-                router.update(placement)
-                for p in pool.apply_placement(placement, now=now,
-                                              prefetch=self.prefetch):
-                    push_fetch(p.eta)
-                max_adapters = max(max_adapters,
-                                   pool.max_adapters_per_server())
-                if heap:   # only keep rebalancing while work remains
-                    heapq.heappush(
-                        heap, (now + self.rebalance_period, seq,
-                               "rebalance", None))
-                    seq += 1
+                do_rebalance(now)
+                if work_remains():
+                    push(now + self.rebalance_period, "rebalance")
+            elif kind == "ctick":
+                feed_completions()
+                # queue depth = *waiting* requests only: with continuous
+                # batching a healthy server legitimately runs a full
+                # decode batch; backlog is what gates drains
+                period = ctrl.config.tick_period
+                util = {}
+                for s in servers:
+                    if s.sid in retired_at:
+                        continue
+                    prev = prev_busy.get(s.sid, 0.0)
+                    util[s.sid] = min(1.0, max(
+                        0.0, (s.busy_time - prev) / period))
+                    prev_busy[s.sid] = s.busy_time
+                state = ClusterState(
+                    now=now, active=sorted(active),
+                    draining=sorted(draining),
+                    drained=drained_servers(now),
+                    queue_depth={s.sid: float(len(s.waiting))
+                                 for s in servers
+                                 if s.sid not in retired_at},
+                    utilization=util)
+                execute(ctrl.tick(state), now)
+                if work_remains() or draining:
+                    push(now + ctrl.config.tick_period, "ctick")
+            elif kind == "provision":
+                sid = pool.add_server()
+                servers.append(SimServer(sid, self.model,
+                                         bank_mode=self.bank_mode))
+                active.add(sid)
+                provisioned_at[sid] = payload    # billed from request
+                do_rebalance(now)   # fold the new server into placement
 
         if self.policy.replicate_all:
             max_adapters = len(self.adapters)
@@ -236,6 +410,9 @@ class ClusterSimulator:
             max_adapters = max(max_adapters, pool.max_adapters_per_server())
             total_bytes = max(total_bytes, pool.total_bytes())
 
+        end_time = last_activity
+        gpu_seconds = sum(retired_at.get(sid, end_time) - t0
+                          for sid, t0 in provisioned_at.items())
         per_server = []
         for s in servers:
             ts = sorted(r.ttft for r in trace
@@ -255,6 +432,15 @@ class ClusterSimulator:
             remote_reads=pool.remote_reads,
             prefetches=pool.prefetches,
             coalesced_fetches=pool.coalesced,
+            scale_ups=scale_ups,
+            drains=drains,
+            retires=retires,
+            controller_rebalances=ctrl_rebalances,
+            gpu_seconds=gpu_seconds,
+            final_servers=len(active),
+            drift_events=(list(ctrl.detector.events)
+                          if ctrl is not None else []),
+            actions=list(ctrl.actions) if ctrl is not None else [],
         )
 
 

@@ -1,0 +1,133 @@
+"""Sliding-window cluster telemetry — the control plane's sensor layer.
+
+``TelemetryHub`` aggregates the existing request lifecycle events
+(arrival routing, completion, timeout) into windowed per-adapter and
+per-server statistics: token/request rates and windowed TTFT/TBT
+percentiles. (Queue depths are instantaneous backend state, not event
+history — the hosts snapshot them into ``ClusterState`` per tick.) Both substrates feed it from the same places the
+``DemandEstimator`` already observes, but where the estimator keeps one
+smoothed level per adapter for *placement*, the hub keeps raw
+timestamped samples so the drift detector and SLO tracker can look at
+the actual recent distribution.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.serving.metrics import percentile
+
+
+class SlidingWindow:
+    """Timestamped samples pruned to a fixed horizon."""
+
+    def __init__(self, horizon: float):
+        self.horizon = horizon
+        self._samples: Deque[Tuple[float, float]] = collections.deque()
+
+    def push(self, t: float, value: float) -> None:
+        self._samples.append((t, value))
+
+    def prune(self, now: float) -> None:
+        cutoff = now - self.horizon
+        q = self._samples
+        while q and q[0][0] < cutoff:
+            q.popleft()
+
+    def values(self, now: float) -> List[float]:
+        self.prune(now)
+        return [v for _, v in self._samples]
+
+    def count(self, now: float) -> int:
+        self.prune(now)
+        return len(self._samples)
+
+    def total(self, now: float) -> float:
+        self.prune(now)
+        return sum(v for _, v in self._samples)
+
+    def rate(self, now: float) -> float:
+        """Sum of samples per second over the (elapsed part of the)
+        window — early in a run the divisor is the time actually
+        covered, not the full horizon."""
+        span = min(self.horizon, now) or 1.0
+        return self.total(now) / span
+
+
+class TelemetryHub:
+    def __init__(self, window: float = 30.0):
+        self.window = window
+        self._adapter_tokens: Dict[str, SlidingWindow] = {}
+        self._adapter_requests: Dict[str, SlidingWindow] = {}
+        self._server_tokens: Dict[int, SlidingWindow] = {}
+        self._ttft = SlidingWindow(window)
+        self._tbt = SlidingWindow(window)
+        self._server_ttft: Dict[int, SlidingWindow] = {}
+        self.arrivals = 0
+        self.completions = 0
+        self.timeouts = 0
+
+    def _win(self, table: Dict, key) -> SlidingWindow:
+        w = table.get(key)
+        if w is None:
+            w = table[key] = SlidingWindow(self.window)
+        return w
+
+    # -- feeds ------------------------------------------------------------
+    def observe_arrival(self, adapter_id: str, server: int,
+                        tokens: float, now: float) -> None:
+        self.arrivals += 1
+        self._win(self._adapter_tokens, adapter_id).push(now, tokens)
+        self._win(self._adapter_requests, adapter_id).push(now, 1.0)
+        self._win(self._server_tokens, server).push(now, tokens)
+
+    def observe_completion(self, req, now: float) -> None:
+        """Feed one finished ``ServeRequest`` (either substrate)."""
+        self.completions += 1
+        ttft, tbt = req.ttft, req.tbt
+        if ttft is not None and ttft >= 0:
+            self._ttft.push(now, ttft)
+            self._win(self._server_ttft, req.server).push(now, ttft)
+        if tbt is not None and tbt > 0:
+            self._tbt.push(now, tbt)
+
+    def observe_timeout(self, now: float) -> None:
+        self.timeouts += 1
+
+    # -- windowed accessors ----------------------------------------------
+    # (queue depths flow through ClusterState, host-built per tick —
+    # they are instantaneous backend state, not event-stream history)
+    def adapter_token_rate(self, adapter_id: str, now: float) -> float:
+        w = self._adapter_tokens.get(adapter_id)
+        return w.rate(now) if w else 0.0
+
+    def adapter_request_rate(self, adapter_id: str, now: float) -> float:
+        w = self._adapter_requests.get(adapter_id)
+        return w.rate(now) if w else 0.0
+
+    def adapter_rates(self, now: float) -> Dict[str, float]:
+        """Per-adapter windowed token rates — the drift detector's
+        input signal."""
+        return {aid: w.rate(now)
+                for aid, w in self._adapter_tokens.items()}
+
+    def server_token_rate(self, server: int, now: float) -> float:
+        w = self._server_tokens.get(server)
+        return w.rate(now) if w else 0.0
+
+    def ttft_percentile(self, p: float, now: float) -> Optional[float]:
+        vs = self._ttft.values(now)
+        return percentile(vs, p) if vs else None
+
+    def tbt_percentile(self, p: float, now: float) -> Optional[float]:
+        vs = self._tbt.values(now)
+        return percentile(vs, p) if vs else None
+
+    def server_ttft_percentile(self, server: int, p: float,
+                               now: float) -> Optional[float]:
+        w = self._server_ttft.get(server)
+        vs = w.values(now) if w else []
+        return percentile(vs, p) if vs else None
+
+    def sample_count(self, now: float) -> int:
+        return self._ttft.count(now)

@@ -8,13 +8,13 @@ from .orchestrator import ClusterOrchestrator
 from .placement import assign_loraserve
 from .pool import AdapterStore, DistributedAdapterPool, FetchPlan
 from .request import Phase, Request, ServeRequest, SimRequest
-from .routing import RoutingTable, UnknownAdapterError
+from .routing import RetiredServerError, RoutingTable, UnknownAdapterError
 from .types import (AdapterInfo, Placement, PlacementContext,
                     PlacementStats, servers_to_adapters)
 
 __all__ = ["assign_loraserve", "AdapterInfo", "Placement",
            "PlacementContext", "PlacementStats", "DemandEstimator",
-           "RoutingTable", "UnknownAdapterError",
+           "RoutingTable", "UnknownAdapterError", "RetiredServerError",
            "AdapterStore", "FetchPlan",
            "DistributedAdapterPool", "ClusterOrchestrator",
            "POLICIES", "LoraservePolicy", "RandomPolicy",

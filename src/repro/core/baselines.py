@@ -38,7 +38,8 @@ class RandomPolicy:
 
     def place(self, ctx: PlacementContext) -> Placement:
         rng = random.Random(self.seed)
-        return {a.adapter_id: {rng.randrange(ctx.n_servers): 1.0}
+        ids = ctx.servers()
+        return {a.adapter_id: {rng.choice(ids): 1.0}
                 for a in ctx.adapters}
 
 
@@ -49,11 +50,11 @@ class ContiguousPolicy:
 
     def place(self, ctx: PlacementContext) -> Placement:
         ordered = sorted(ctx.adapters, key=lambda a: a.rank)
-        n = ctx.n_servers
-        per = -(-len(ordered) // n)
+        ids = ctx.servers()
+        per = -(-len(ordered) // len(ids))
         placement: Placement = {}
         for i, a in enumerate(ordered):
-            placement[a.adapter_id] = {min(i // per, n - 1): 1.0}
+            placement[a.adapter_id] = {ids[min(i // per, len(ids) - 1)]: 1.0}
         return placement
 
 
@@ -63,8 +64,8 @@ class ToppingsPolicy:
     replicate_all = True     # assumes full replication (paper §II-B.2)
 
     def place(self, ctx: PlacementContext) -> Placement:
-        return {a.adapter_id:
-                {s: 1.0 / ctx.n_servers for s in range(ctx.n_servers)}
+        ids = ctx.servers()
+        return {a.adapter_id: {s: 1.0 / len(ids) for s in ids}
                 for a in ctx.adapters}
 
 

@@ -44,6 +44,10 @@ class ClusterOrchestrator:
         self.access_mode = access_mode
         self.prefetch = prefetch
         self.demand = DemandEstimator()
+        # fleet lifecycle (controlplane scale/drain): ids are stable,
+        # placement is solved over active-minus-draining only
+        self.active: List[int] = list(range(n_servers))
+        self.draining: set = set()
         ctx = PlacementContext(
             n_servers=n_servers, adapters=adapters,
             demand_tps={a.adapter_id: 1.0 for a in adapters},
@@ -93,6 +97,9 @@ class ClusterOrchestrator:
         return sid, lat
 
     # -- control path (Fig 11 steps 6-7) -----------------------------------
+    def placeable_servers(self) -> List[int]:
+        return [s for s in self.active if s not in self.draining]
+
     def end_of_timestep(self, period_s: float,
                         now: float = 0.0) -> Placement:
         for aid in self.meta:
@@ -100,16 +107,65 @@ class ClusterOrchestrator:
                                 / period_s)
         self._window_tokens = {}
         if self.policy.dynamic:
-            ctx = PlacementContext(
-                n_servers=self.n, adapters=self.adapters,
-                demand_tps=self.demand.demands(list(self.meta)),
-                operating_points=self.operating_points,
-                prev_placement=self.placement)
-            self.placement = self.policy.place(ctx)
-            self.router.update(self.placement)
-            plans = self.store.apply_placement(self.placement, now=now,
-                                               prefetch=self.prefetch)
-            if self.sync_store:
-                for p in plans:
-                    self.store.finish(p)
+            self._resolve(now)
         return self.placement
+
+    def _resolve(self, now: float) -> List[FetchPlan]:
+        """Re-solve placement over the placeable fleet and push it into
+        the routing table + store. Returns any started prefetch plans
+        (already completed when ``sync_store``)."""
+        ids = self.placeable_servers()
+        ctx = PlacementContext(
+            n_servers=len(ids), adapters=self.adapters,
+            demand_tps=self.demand.demands(list(self.meta)),
+            operating_points=self.operating_points,
+            prev_placement=self.placement, server_ids=ids)
+        self.placement = self.policy.place(ctx)
+        self.router.update(self.placement)
+        plans = self.store.apply_placement(self.placement, now=now,
+                                           prefetch=self.prefetch)
+        if self.sync_store:
+            for p in plans:
+                self.store.finish(p)
+        return plans
+
+    # -- fleet lifecycle (controlplane scale-up / drain / retire) ----------
+    def add_server(self, now: float = 0.0) -> int:
+        """Provision one server and fold it into a fresh placement.
+        Returns the new (stable) server id."""
+        sid = self.store.add_server()
+        self.n = self.store.n_servers
+        self.active.append(sid)
+        self._resolve(now)
+        return sid
+
+    def begin_drain(self, server_id: int,
+                    now: float = 0.0) -> List[FetchPlan]:
+        """Take ``server_id`` out of placement and routing, then migrate
+        its holdings to the survivors through the store. Returns the
+        in-flight migration plans (the caller turns their ETAs into
+        fetch events; empty when ``sync_store`` completed them)."""
+        if server_id in self.draining:
+            return []
+        self.draining.add(server_id)
+        self._resolve(now)
+        plans = self.store.drain_server(server_id, now=now)
+        if self.sync_store:
+            for p in plans:
+                self.store.finish(p)
+            return []
+        return plans
+
+    def drain_complete(self, server_id: int) -> bool:
+        """Whether the store side of a drain has finished: no copies
+        left on the server and no transfers touching it. (The host also
+        checks its backend for still-running requests.)"""
+        return (self.store.server_adapter_count(server_id) == 0
+                and self.store.inflight_from(server_id) == 0
+                and self.store.inflight_to(server_id) == 0)
+
+    def retire_server(self, server_id: int) -> None:
+        self.store.retire_server(server_id)
+        self.router.block_server(server_id)
+        self.draining.discard(server_id)
+        self.active.remove(server_id)

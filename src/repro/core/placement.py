@@ -114,17 +114,18 @@ def _allocate_leftovers(leftovers: List[Tuple[str, float, int]],
 
 
 def _permute(bins: List[_Bin], prev: Optional[Placement],
-             n_servers: int) -> List[int]:
-    """Step 5: greedy max-overlap matching bins -> server ids."""
+             server_ids: List[int]) -> List[int]:
+    """Step 5: greedy max-overlap matching bins -> physical server ids
+    (with autoscaling these need not be 0..n-1)."""
     if not prev:
-        return list(range(len(bins)))
-    prev_sets: Dict[int, set] = {s: set() for s in range(n_servers)}
+        return list(server_ids[:len(bins)])
+    prev_sets: Dict[int, set] = {s: set() for s in server_ids}
     for aid, entry in prev.items():
         for sid in entry:
             if sid in prev_sets:
                 prev_sets[sid].add(aid)
     assigned = [-1] * len(bins)
-    free = set(range(n_servers))
+    free = set(server_ids)
     order = sorted(range(len(bins)),
                    key=lambda i: -len(bins[i].shares))
     for i in order:
@@ -138,7 +139,7 @@ def _permute(bins: List[_Bin], prev: Optional[Placement],
 def assign_loraserve(ctx: PlacementContext) -> Tuple[Placement,
                                                      PlacementStats]:
     """Algorithm 1: ASSIGNLORASERVE."""
-    n = ctx.n_servers
+    n = len(ctx.servers())
     # -- Step 1
     rank_util = _rank_utils(ctx)
     total_util = sum(rank_util.values())
@@ -162,7 +163,7 @@ def assign_loraserve(ctx: PlacementContext) -> Tuple[Placement,
     # -- Step 4
     _allocate_leftovers(leftovers, bins, target_util)
     # -- Step 5
-    server_of_bin = _permute(bins, ctx.prev_placement, n)
+    server_of_bin = _permute(bins, ctx.prev_placement, ctx.servers())
     # -- Build placement with normalized phi
     placement: Placement = {}
     for b, sid in zip(bins, server_of_bin):

@@ -89,6 +89,11 @@ class AdapterStore:
         self.network = network
         self.desired: Dict[str, Set[int]] = {}
         self._inflight: Dict[Tuple[int, str], FetchPlan] = {}
+        # autoscaling lifecycle: draining servers accept no new copies
+        # (their holdings are being migrated out); retired servers are
+        # out of the cluster entirely, ids never reused
+        self.draining: Set[int] = set()
+        self.retired: Set[int] = set()
         # telemetry
         self.fetches = 0
         self.fetch_bytes = 0
@@ -98,6 +103,7 @@ class AdapterStore:
         self.coalesced = 0
         self.host_hits = 0
         self.ssd_fetches = 0
+        self.drain_fetches = 0
 
     # -- initial seeding -----------------------------------------------
     def seed(self, placement: Placement) -> None:
@@ -119,6 +125,70 @@ class AdapterStore:
         if adapter_id is None:
             return len(self._inflight)
         return sum(1 for (_, aid) in self._inflight if aid == adapter_id)
+
+    def inflight_to(self, server_id: int) -> int:
+        return sum(1 for (sid, _) in self._inflight if sid == server_id)
+
+    def inflight_from(self, server_id: int) -> int:
+        """Transfers currently reading bytes out of ``server_id`` — a
+        draining server cannot retire while it is still a source."""
+        return sum(1 for p in self._inflight.values()
+                   if p.src_server == server_id)
+
+    # -- fleet lifecycle (controlplane scale-up / drain / retire) ---------
+    def add_server(self) -> int:
+        """Provision one empty server; returns its (stable, new) id."""
+        sid = self.n_servers
+        self.n_servers += 1
+        self.local.append(set())
+        self.host_cache.append(dict())
+        return sid
+
+    def begin_drain(self, server_id: int) -> None:
+        """Stop placing new copies on ``server_id``; its existing copies
+        stay readable (as fetch sources and remote-read peers) until the
+        migration out completes."""
+        self.draining.add(server_id)
+
+    def drain_server(self, server_id: int, now: float = 0.0
+                     ) -> List[FetchPlan]:
+        """Migrate everything off ``server_id``: for each adapter it
+        holds, start fetches toward its desired servers (the caller has
+        already re-placed without this server) and GC copies that are
+        already redundant. Returns the started plans; the server is
+        empty once they land and ``poll`` has GC'd it."""
+        self.begin_drain(server_id)
+        plans: List[FetchPlan] = []
+        for aid in sorted(self.local[server_id]):
+            dests = self.desired.get(aid, set()) - {server_id}
+            if not dests:
+                raise RuntimeError(
+                    f"drain of server {server_id} before re-placement: "
+                    f"adapter {aid!r} has nowhere to go")
+            for d in sorted(dests):
+                if aid not in self.local[d]:
+                    p = self.start_fetch(d, aid, now=now, mode="drain")
+                    if not p.hit and not p.coalesced:
+                        plans.append(p)
+            self._gc(aid)   # no-op while the migration is in flight
+        return plans
+
+    def retire_server(self, server_id: int) -> None:
+        """Remove an emptied, drained server from the cluster. Loud if
+        it still holds copies or feeds in-flight transfers."""
+        if self.local[server_id]:
+            raise RuntimeError(
+                f"retire of server {server_id} with "
+                f"{len(self.local[server_id])} HBM copies still resident")
+        if self.inflight_from(server_id) or self.inflight_to(server_id):
+            raise RuntimeError(
+                f"retire of server {server_id} with transfers in flight")
+        self.host_cache[server_id].clear()
+        self.draining.discard(server_id)
+        self.retired.add(server_id)
+
+    def live_servers(self) -> List[int]:
+        return [s for s in range(self.n_servers) if s not in self.retired]
 
     # -- placement updates (Fig 13; now with optional prefetch) ----------
     def apply_placement(self, placement: Placement, now: float = 0.0,
@@ -185,6 +255,12 @@ class AdapterStore:
             self._gc(adapter_id)
             return FetchPlan(adapter_id, server_id, mode=mode, hit=True,
                              eta=now)
+        if server_id in self.retired:
+            raise RuntimeError(f"fetch of {adapter_id!r} to retired "
+                               f"server {server_id}")
+        if server_id in self.draining:
+            raise RuntimeError(f"fetch of {adapter_id!r} to draining "
+                               f"server {server_id}")
         key = (server_id, adapter_id)
         if key in self._inflight:
             self.coalesced += 1
@@ -205,9 +281,11 @@ class AdapterStore:
         self._inflight[key] = plan
         # `fetches`/`fetch_bytes` stay miss-driven (their pre-data-plane
         # meaning) so they compare across access modes; proactive warms
-        # are counted under `prefetches` only
+        # and drain migrations are counted separately
         if mode == "prefetch":
             self.prefetches += 1
+        elif mode == "drain":
+            self.drain_fetches += 1
         else:
             self.fetches += 1
             self.fetch_bytes += nbytes

@@ -27,12 +27,18 @@ class UnknownAdapterError(KeyError):
                 f"placement update)")
 
 
+class RetiredServerError(RuntimeError):
+    """Raised when a placement or route would touch a retired server —
+    the control plane's loss-free-drain guarantee made loud."""
+
+
 class RoutingTable:
     def __init__(self, placement: Optional[Placement] = None, seed: int = 0):
         self._rng = random.Random(seed)
         self._table: Dict[str, List[Tuple[int, float]]] = {}
         self.request_counts: Dict[str, int] = {}
         self.token_counts: Dict[str, float] = {}
+        self.blocked: set = set()          # retired server ids
         if placement:
             self.update(placement)
 
@@ -40,10 +46,35 @@ class RoutingTable:
         table = {}
         for aid, entry in placement.items():
             items = sorted(entry.items())
+            bad = [sid for sid, _ in items if sid in self.blocked]
+            if bad:
+                raise RetiredServerError(
+                    f"placement routes adapter {aid!r} to retired "
+                    f"server(s) {bad}")
             tot = sum(phi for _, phi in items)
             assert tot > 0, f"adapter {aid} has zero total phi"
             table[aid] = [(sid, phi / tot) for sid, phi in items]
         self._table = table
+
+    def block_server(self, server_id: int) -> None:
+        """Retire ``server_id`` from routing: strip it from every entry
+        (renormalizing phi over the survivors) and refuse it in all
+        future placements. An adapter whose *only* route was the blocked
+        server raises — the drain that preceded retirement must already
+        have re-placed it."""
+        self.blocked.add(server_id)
+        for aid, entry in list(self._table.items()):
+            kept = [(sid, phi) for sid, phi in entry if sid != server_id]
+            if len(kept) == len(entry):
+                continue
+            if not kept:
+                raise RetiredServerError(
+                    f"adapter {aid!r} has no route left after retiring "
+                    f"server {server_id}")
+            tot = sum(phi for _, phi in kept)
+            self._table[aid] = [(sid, phi / tot) if tot > 0
+                                else (sid, 1.0 / len(kept))
+                                for sid, phi in kept]
 
     def servers(self, adapter_id: str) -> List[Tuple[int, float]]:
         try:
@@ -69,14 +100,19 @@ class RoutingTable:
         self.token_counts[adapter_id] = \
             self.token_counts.get(adapter_id, 0.0) + tokens
         if len(entry) == 1:
-            return entry[0][0], list(entry)
+            return self._checked(entry[0][0]), list(entry)
         u = self._rng.random()
         acc = 0.0
         for sid, phi in entry:
             acc += phi
             if u <= acc:
-                return sid, list(entry)
-        return entry[-1][0], list(entry)
+                return self._checked(sid), list(entry)
+        return self._checked(entry[-1][0]), list(entry)
+
+    def _checked(self, sid: int) -> int:
+        if sid in self.blocked:
+            raise RetiredServerError(f"routed to retired server {sid}")
+        return sid
 
     def reset_counts(self) -> Dict[str, int]:
         counts = self.request_counts

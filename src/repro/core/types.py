@@ -23,6 +23,14 @@ class PlacementContext:
     demand_tps: Dict[str, float]                  # projected TPS per adapter
     operating_points: Dict[int, float]            # rank -> max TPS under SLO
     prev_placement: Optional[Placement] = None
+    # with autoscaling the placeable fleet is no longer 0..n-1: retired
+    # and draining servers drop out while their ids stay stable
+    server_ids: Optional[List[int]] = None
+
+    def servers(self) -> List[int]:
+        """Physical ids of the placeable servers (len == n_servers)."""
+        return (list(self.server_ids) if self.server_ids is not None
+                else list(range(self.n_servers)))
 
     def adapter(self, adapter_id: str) -> AdapterInfo:
         return next(a for a in self.adapters if a.adapter_id == adapter_id)

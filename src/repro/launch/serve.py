@@ -75,6 +75,19 @@ def main():
     ap.add_argument("--prefetch", action="store_true",
                     help="warm newly-placed adapters at each rebalance "
                          "instead of migrating lazily on first hit")
+    ap.add_argument("--controller", action="store_true",
+                    help="run the SLO-driven control plane: drift "
+                         "detection, triggered rebalances, and server "
+                         "scale-up/drain between --min-servers and "
+                         "--max-servers")
+    ap.add_argument("--slo-ttft", type=float, default=5.0,
+                    help="TTFT target (seconds) the controller defends")
+    ap.add_argument("--slo-target", type=float, default=0.95,
+                    help="required fraction of requests inside the SLO")
+    ap.add_argument("--min-servers", type=int, default=1)
+    ap.add_argument("--max-servers", type=int, default=4)
+    ap.add_argument("--tick-period", type=float, default=1.0,
+                    help="controller tick (seconds)")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--duration", type=float, default=6.0,
@@ -91,19 +104,30 @@ def main():
                             nbytes=ranks[i % 5] * 2_000_000)
                 for i in range(args.adapters)]
 
+    controller = None
+    if args.controller:
+        from repro.controlplane import (ClusterController,
+                                        ControllerConfig, SLOSpec)
+        controller = ClusterController(
+            SLOSpec(ttft=args.slo_ttft, target=args.slo_target,
+                    window=max(4 * args.tick_period, 2.0)),
+            ControllerConfig(tick_period=args.tick_period,
+                             min_servers=args.min_servers,
+                             max_servers=args.max_servers))
+
     backend = EngineBackend(cfg, params, args.servers, max_batch=4,
                             max_len=args.prompt_len + args.max_new + 8,
                             seed=args.seed, bank_mode=args.bank_mode)
     cluster = LoRAServeCluster(
         backend, adapters, policy=args.policy, network=NetworkModel(),
         rebalance_period=args.rebalance_period, seed=args.seed,
-        access_mode=args.access_mode, prefetch=args.prefetch)
+        access_mode=args.access_mode, prefetch=args.prefetch,
+        controller=controller)
     trace = build_trace(adapters, cfg, args.requests, args.prompt_len,
                         args.max_new, args.duration, args.seed)
     report = cluster.run(trace)
 
-    for sid in range(args.servers):
-        mem = report.memory_profile[sid]
+    for sid, mem in enumerate(report.memory_profile):
         print(f"server {sid}: requests={report.per_server_counts[sid]} "
               f"bank_adapters={mem['n_adapters']} "
               f"bank_max_rank={mem['max_rank']}")
@@ -121,6 +145,14 @@ def main():
           f"remote_reads={report.remote_reads} "
           f"prefetches={report.prefetches} "
           f"coalesced_fetches={report.coalesced_fetches}")
+    if args.controller:
+        print(f"controller: slo_attainment={report.slo_attainment(args.slo_ttft):.3f} "
+              f"scale_ups={report.scale_ups} drains={report.drains} "
+              f"retires={report.retires} "
+              f"oob_rebalances={report.controller_rebalances} "
+              f"final_servers={report.final_servers} "
+              f"gpu_seconds={report.gpu_seconds:.1f} "
+              f"drift_events={len(report.drift_events)}")
     print("cluster drained OK")
 
 

@@ -61,6 +61,16 @@ class ServingBackend(Protocol):
 
     def server_load(self, server_id: int, now: float) -> float: ...
 
+    def queue_depth(self, server_id: int) -> float:
+        """Waiting (not-yet-admitted) requests — the controller's
+        backlog signal."""
+        ...
+
+    def utilization(self, server_id: int, now: float) -> float:
+        """Busy fraction (or occupancy proxy) in [0, 1] since the last
+        call — gates control-plane drains."""
+        ...
+
     def load_adapters(self, server_id: int,
                       adapter_ranks: Dict[str, int]) -> None: ...
 
@@ -79,6 +89,16 @@ class ServingBackend(Protocol):
     def evict_adapter(self, server_id: int, adapter_id: str) -> bool: ...
 
     def hosted_adapters(self, server_id: int) -> Dict[str, int]: ...
+
+    def add_server(self) -> int:
+        """Provision one more (empty) server; returns its id. Ids are
+        stable — a retired server's id is never reused."""
+        ...
+
+    def retire_server(self, server_id: int) -> None:
+        """Release a drained server's execution resources. The server
+        must have no queued or running work."""
+        ...
 
     def memory_profile(self) -> List[Dict[str, float]]:
         """Per-server {n_adapters, max_rank, adapter_bytes, bank_mode,
@@ -110,6 +130,7 @@ class SimBackend:
         self._inflight: List[ServeRequest] = []
         self._completed: List[ServeRequest] = []
         self._timed_out: List[ServeRequest] = []
+        self._util_prev: Dict[int, tuple] = {}
 
     def start(self) -> None:
         pass
@@ -130,6 +151,7 @@ class SimBackend:
                     self._timed_out.append(r)
             if s.busy_until <= now + 1e-12 and s.has_work(now):
                 s.step(now)
+            s.finished.clear()   # completions flow via _completed here
         still = []
         for r in self._inflight:
             (self._completed if r.finish >= 0 else still).append(r)
@@ -158,6 +180,18 @@ class SimBackend:
     def server_load(self, server_id: int, now: float) -> float:
         return self.servers[server_id].estimated_work(now)
 
+    def queue_depth(self, server_id: int) -> float:
+        return float(len(self.servers[server_id].waiting))
+
+    def utilization(self, server_id: int, now: float) -> float:
+        """Busy fraction since the previous call for this server."""
+        s = self.servers[server_id]
+        t0, b0 = self._util_prev.get(server_id, (0.0, 0.0))
+        self._util_prev[server_id] = (now, s.busy_time)
+        if now <= t0:
+            return 0.0
+        return min(1.0, max(0.0, (s.busy_time - b0) / (now - t0)))
+
     def load_adapters(self, server_id: int,
                       adapter_ranks: Dict[str, int]) -> None:
         self._hosted[server_id].update(adapter_ranks)
@@ -183,6 +217,24 @@ class SimBackend:
 
     def hosted_adapters(self, server_id: int) -> Dict[str, int]:
         return dict(self._hosted[server_id])
+
+    def add_server(self) -> int:
+        from repro.cluster.server import SimServer
+        sid = self.n_servers
+        self.n_servers += 1
+        self.servers.append(SimServer(sid, self.model,
+                                      bank_mode=self.bank_mode))
+        self._hosted.append({})
+        self._remote.append(set())
+        return sid
+
+    def retire_server(self, server_id: int) -> None:
+        s = self.servers[server_id]
+        if s.waiting or s.running:
+            raise RuntimeError(f"retire of sim server {server_id} with "
+                               f"work still queued")
+        self._hosted[server_id].clear()
+        self._remote[server_id].clear()
 
     def memory_profile(self) -> List[Dict[str, float]]:
         out = []
@@ -292,6 +344,18 @@ class EngineBackend:
         eng = self.engines[server_id]
         return 0.0 if eng is None else float(len(eng.queue) + eng.active)
 
+    def queue_depth(self, server_id: int) -> float:
+        eng = self.engines[server_id]
+        return 0.0 if eng is None else float(len(eng.queue))
+
+    def utilization(self, server_id: int, now: float) -> float:
+        """Instantaneous batch occupancy — the closest cheap proxy for
+        busy fraction on a real engine."""
+        eng = self.engines[server_id]
+        if eng is None:
+            return 0.0
+        return min(1.0, eng.active / max(1, self.max_batch))
+
     # -- placement path -------------------------------------------------
     def load_adapters(self, server_id: int,
                       adapter_ranks: Dict[str, int]) -> None:
@@ -345,6 +409,21 @@ class EngineBackend:
     def hosted_adapters(self, server_id: int) -> Dict[str, int]:
         eng = self.engines[server_id]
         return {} if eng is None else dict(eng.adapter_ranks)
+
+    def add_server(self) -> int:
+        sid = self.n_servers
+        self.n_servers += 1
+        self.engines.append(None)   # engine builds lazily on first load
+        self._remote.append(set())
+        return sid
+
+    def retire_server(self, server_id: int) -> None:
+        eng = self.engines[server_id]
+        if eng is not None and (eng.queue or eng.active):
+            raise RuntimeError(f"retire of engine {server_id} with "
+                               f"work still queued")
+        self.engines[server_id] = None   # frees the bank
+        self._remote[server_id].clear()
 
     def memory_profile(self) -> List[Dict[str, float]]:
         from repro.lora.adapter import bank_nbytes

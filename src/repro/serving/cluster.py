@@ -76,6 +76,15 @@ class ClusterReport:
     remote_reads: int = 0              # misses served via peer GDR reads
     prefetches: int = 0                # rebalance-driven proactive warms
     coalesced_fetches: int = 0         # duplicate fetches joined in flight
+    # control-plane telemetry (controller runs only)
+    scale_ups: int = 0
+    drains: int = 0
+    retires: int = 0
+    controller_rebalances: int = 0     # out-of-band (drift/SLO) ones
+    gpu_seconds: float = 0.0           # per-server provision->retire
+    final_servers: int = 0             # active fleet size at end of run
+    drift_events: List = dataclasses.field(default_factory=list)
+    controller_actions: List = dataclasses.field(default_factory=list)
 
     def _eligible(self) -> List[ServeResult]:
         return [r for r in self.results
@@ -109,6 +118,17 @@ class ClusterReport:
     def meets_slo(self, slo_ttft: float) -> bool:
         return self.timed_out == 0 and self.p95_ttft() <= slo_ttft
 
+    def slo_attainment(self, slo_ttft: float) -> float:
+        """Fraction of eligible requests with TTFT inside the target;
+        unfinished/dropped requests count as misses."""
+        elig = [r for r in self.results if r.arrival >= self.warmup]
+        if not elig:
+            return 1.0
+        ok = sum(1 for r in elig
+                 if r.finished and r.ttft is not None
+                 and r.ttft <= slo_ttft)
+        return ok / len(elig)
+
 
 class LoRAServeCluster:
     """One-shot cluster run: construct, ``run(trace)``, read the report."""
@@ -118,7 +138,8 @@ class LoRAServeCluster:
                  policy: str = "loraserve", network=None,
                  rebalance_period: float = 15.0, warmup: float = 0.0,
                  seed: int = 0, operating_points=None, server_model=None,
-                 access_mode: str = "migrate", prefetch: bool = False):
+                 access_mode: str = "migrate", prefetch: bool = False,
+                 controller=None):
         if operating_points is None:
             from repro.cluster.costmodel import (ServerModel,
                                                  profile_operating_points)
@@ -130,6 +151,16 @@ class LoRAServeCluster:
         self.rebalance_period = rebalance_period
         self.warmup = warmup
         self.access_mode = access_mode
+        # closed-loop control plane (repro.controlplane): may rebalance
+        # out of band, provision servers, and drain them mid-run
+        self.controller = controller
+        if controller is not None:
+            # hand it the capacity model for Algorithm-1 drain gating
+            if controller.operating_points is None:
+                controller.operating_points = dict(operating_points)
+            if not controller.adapter_ranks:
+                controller.adapter_ranks = {a.adapter_id: a.rank
+                                            for a in adapters}
         self.orch = ClusterOrchestrator(
             backend.n_servers, adapters, operating_points, policy=policy,
             network=network, seed=seed, access_mode=access_mode,
@@ -138,11 +169,20 @@ class LoRAServeCluster:
         self.placements: List[Placement] = [
             copy.deepcopy(self.orch.placement)]
         self.rebalances = 0
+        self.controller_rebalances = 0
+        self.scale_ups = 0
+        self.drains = 0
+        self.retires = 0
+        self._provisioned_at: Dict[int, float] = {
+            i: 0.0 for i in range(backend.n_servers)}
+        self._retired_at: Dict[int, float] = {}
         self.per_server_counts = [0] * backend.n_servers
         self.routed: Dict[int, int] = {}       # req_id -> server
         self._finished: List[ServeRequest] = []
         self._timed_out: List[ServeRequest] = []
         self._ran = False
+        self._last_reb = 0.0
+        self._end_time = 0.0
         self._seed_backend()
         # running peaks across rebalances (the store GCs lazily, so the
         # end-of-run state understates what a server actually held)
@@ -161,7 +201,7 @@ class LoRAServeCluster:
         if req.rank == 0 and aid in self.meta:
             req.rank = self.meta[aid].rank
         if self.orch.policy.replicate_all:
-            sid = min(range(self.backend.n_servers),
+            sid = min(self.orch.placeable_servers(),
                       key=lambda i: self.backend.server_load(i, now))
             req.fetch_latency = 0.0
             self.backend.load_adapters(sid, {aid: req.rank})
@@ -179,41 +219,99 @@ class LoRAServeCluster:
         self.backend.submit(sid, req, now)
         self.per_server_counts[sid] += 1
         self.routed[req.req_id] = sid
+        if self.controller is not None:
+            self.controller.observe_arrival(
+                aid, sid, req.prompt_len + req.output_len, now)
 
     def _poll_store(self, now: float) -> None:
         """Drain adapter-store fetch completions: install prefetched
-        copies in backend banks and promote remote-read serves. The
-        promote is unconditional (a no-op discard for non-remote
-        copies) because a remote-read serve may have coalesced onto a
-        transfer that started as a prefetch or migrate fetch."""
+        and drain-migrated copies in backend banks and promote
+        remote-read serves. The promote is unconditional (a no-op
+        discard for non-remote copies) because a remote-read serve may
+        have coalesced onto a transfer that started as a prefetch or
+        migrate fetch."""
         for plan in self.orch.store.poll(now):
             aid = plan.adapter_id
-            if plan.mode == "prefetch":
+            if plan.mode in ("prefetch", "drain"):
                 self.backend.load_adapters(
                     plan.dest, {aid: self.meta[aid].rank})
             self.backend.promote_adapter(plan.dest, aid)
 
     # -- control path (Fig 11 steps 6-7), mid-flight --------------------
-    def _rebalance(self, period: float, now: float) -> None:
+    def _sync_banks(self, placement: Placement) -> None:
+        """Sync backend banks down to the placement (evictions only —
+        newly placed adapters load lazily on their first routed
+        request). Runs at *every* timestep, not only when the placement
+        changed: an eviction refused while the adapter was in flight
+        must be retried once that traffic drains."""
         prev = self.placements[-1]
-        new = self.orch.end_of_timestep(max(period, 1e-9), now=now)
-        self.rebalances += 1
-        if new != prev:
-            self.placements.append(copy.deepcopy(new))
-        # sync backend banks to the placement at *every* timestep, not
-        # only when it changed: an eviction refused while the adapter
-        # was in flight must be retried once that traffic drains
-        want = servers_to_adapters(new)
+        if placement != prev:
+            self.placements.append(copy.deepcopy(placement))
+        want = servers_to_adapters(placement)
         for sid in range(self.backend.n_servers):
+            if sid in self._retired_at:
+                continue
             wanted = set(want.get(sid, []))
             for aid in list(self.backend.hosted_adapters(sid)):
                 if aid not in wanted:
                     self.backend.evict_adapter(sid, aid)
-        # newly placed adapters load lazily on their first routed request
         self._max_adapters = max(self._max_adapters,
                                  self.orch.store.max_adapters_per_server())
         self._total_bytes = max(self._total_bytes,
                                 self.orch.store.total_bytes())
+
+    def _rebalance(self, period: float, now: float,
+                   periodic: bool = True) -> None:
+        new = self.orch.end_of_timestep(max(period, 1e-9), now=now)
+        if periodic:
+            self.rebalances += 1
+        self._sync_banks(new)
+
+    # -- controller actions (controlplane tick) --------------------------
+    def _control_tick(self, now: float) -> None:
+        from repro.controlplane import ClusterState
+        ctrl = self.controller
+        orch = self.orch
+        drained = [sid for sid in sorted(orch.draining)
+                   if orch.drain_complete(sid)
+                   and self.backend.server_load(sid, now) == 0]
+        live = [s for s in range(self.backend.n_servers)
+                if s not in self._retired_at]
+        state = ClusterState(
+            now=now,
+            active=list(orch.placeable_servers()),
+            draining=sorted(orch.draining),
+            drained=drained,
+            queue_depth={s: self.backend.queue_depth(s) for s in live},
+            utilization={s: self.backend.utilization(s, now)
+                         for s in live})
+        for a in ctrl.tick(state):
+            if a.kind == "rebalance":
+                self.controller_rebalances += 1
+                # skip if a periodic rebalance already ran this instant:
+                # re-observing a just-cleared window would feed the
+                # demand estimator a spurious zero-tps sample
+                if now - self._last_reb > 1e-9:
+                    self._rebalance(now - self._last_reb, now,
+                                    periodic=False)
+                    self._last_reb = now
+            elif a.kind == "scale-up":
+                self.scale_ups += 1
+                sid = self.orch.add_server(now)
+                bid = self.backend.add_server()
+                assert sid == bid, "store/backend server ids diverged"
+                self._provisioned_at[sid] = now
+                self.per_server_counts.append(0)
+                self._sync_banks(self.orch.placement)
+            elif a.kind == "drain":
+                self.drains += 1
+                self.orch.begin_drain(a.server, now=now)
+                self._sync_banks(self.orch.placement)
+            elif a.kind == "retire":
+                self.retires += 1
+                self.orch.retire_server(a.server)
+                self.backend.retire_server(a.server)
+                self._retired_at[a.server] = now
 
     # -- run loop --------------------------------------------------------
     def run(self, trace: List[ServeRequest], *,
@@ -224,11 +322,14 @@ class LoRAServeCluster:
         self._ran = True
         trace = sorted(trace, key=lambda r: r.arrival)
         n = len(trace)
+        ctrl = self.controller
         dynamic = self.orch.policy.dynamic
         self.backend.start()
         now = 0.0
-        last_reb = 0.0
+        self._last_reb = 0.0
         next_reb = self.rebalance_period if dynamic else float("inf")
+        next_ctick = (ctrl.config.tick_period if ctrl is not None
+                      else float("inf"))
         i = 0
         for _ in range(max_steps):
             self._poll_store(now)
@@ -236,15 +337,25 @@ class LoRAServeCluster:
                 self._dispatch(trace[i], now)
                 i += 1
             if dynamic and now + 1e-12 >= next_reb:
-                self._rebalance(now - last_reb, now)
-                last_reb = now
+                self._rebalance(now - self._last_reb, now)
+                self._last_reb = now
                 next_reb = now + self.rebalance_period
+            if ctrl is not None and now + 1e-12 >= next_ctick:
+                self._control_tick(now)
+                next_ctick = now + ctrl.config.tick_period
             self.backend.step(now)
             for req in self.backend.drain_completed():
                 self.metrics.record(req)
                 self._finished.append(req)
-            self._timed_out.extend(self.backend.drain_timed_out())
-            if i >= n and self.backend.pending() == 0:
+                if ctrl is not None:
+                    ctrl.observe_completion(
+                        req, req.finish if req.finish >= 0 else now)
+            for req in self.backend.drain_timed_out():
+                self._timed_out.append(req)
+                if ctrl is not None:
+                    ctrl.observe_timeout(now)
+            if i >= n and self.backend.pending() == 0 \
+                    and not self.orch.draining:
                 break
             if self.backend.realtime:
                 if self.backend.pending() == 0 and i < n:
@@ -263,6 +374,9 @@ class LoRAServeCluster:
                     cands.append(t)
                 if dynamic and (i < n or self.backend.pending()):
                     cands.append(next_reb)
+                if ctrl is not None and (i < n or self.backend.pending()
+                                         or self.orch.draining):
+                    cands.append(next_ctick)
                 if not cands:
                     break           # nothing can ever happen again
                 now = max(now, min(cands))
@@ -270,6 +384,7 @@ class LoRAServeCluster:
         # flight when the last request finished) so the report's bank
         # and remote-residency state is consistent
         self._poll_store(float("inf"))
+        self._end_time = now
         return self._report(trace)
 
     def _report(self, trace: List[ServeRequest]) -> ClusterReport:
@@ -293,6 +408,9 @@ class LoRAServeCluster:
             max_adapters = max(self._max_adapters,
                                store.max_adapters_per_server())
             total_bytes = max(self._total_bytes, store.total_bytes())
+        gpu_seconds = sum(
+            self._retired_at.get(sid, self._end_time) - t0
+            for sid, t0 in self._provisioned_at.items())
         return ClusterReport(
             results=results,
             summary=self.metrics.summary(),
@@ -311,4 +429,14 @@ class LoRAServeCluster:
             remote_reads=store.remote_reads,
             prefetches=store.prefetches,
             coalesced_fetches=store.coalesced,
+            scale_ups=self.scale_ups,
+            drains=self.drains,
+            retires=self.retires,
+            controller_rebalances=self.controller_rebalances,
+            gpu_seconds=gpu_seconds,
+            final_servers=len(self.orch.placeable_servers()),
+            drift_events=(list(self.controller.detector.events)
+                          if self.controller is not None else []),
+            controller_actions=(list(self.controller.actions)
+                                if self.controller is not None else []),
         )

@@ -10,6 +10,7 @@ timestamps land in the same domain as the untouched arrivals.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import List
 
 from .engine import ServingEngine
@@ -20,7 +21,10 @@ def replay(engine: ServingEngine, requests: List[ServeRequest],
            speedup: float = 1.0, max_iters: int = 1_000_000) -> dict:
     """Feed `requests` (with .arrival in seconds) into the engine in real
     time (optionally compressed by `speedup`), stepping the engine
-    continuously. Returns metrics summary. Does not mutate arrivals."""
+    continuously. Returns the metrics summary plus an ``exhausted`` key:
+    True when the iteration budget ran out with requests still pending
+    (a truncated replay must not masquerade as a complete one). Does not
+    mutate arrivals."""
     pending = sorted(requests, key=lambda r: r.arrival)
     t0 = time.monotonic()
     old_clock = engine._clock
@@ -38,4 +42,12 @@ def replay(engine: ServingEngine, requests: List[ServeRequest],
             iters += 1
     finally:
         engine._clock = old_clock
-    return engine.metrics.summary()
+    summary = engine.metrics.summary()
+    left = (len(pending) - i) + len(engine.queue) + engine.active
+    summary["exhausted"] = left > 0
+    if summary["exhausted"]:
+        warnings.warn(
+            f"replay stopped at max_iters={max_iters} with {left} "
+            f"request(s) still pending — metrics cover a truncated run",
+            RuntimeWarning, stacklevel=2)
+    return summary

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 import random
-from typing import List
+from typing import List, Optional
 
 from repro.core.types import AdapterInfo
 from repro.cluster.server import SimRequest
@@ -43,7 +43,26 @@ def _drift(pattern: str, progress: float) -> float:
 
 def production_trace(n_adapters: int, rps: float, duration: float,
                      prompt_len: int = 512, output_len: int = 128,
-                     seed: int = 0) -> List[SimRequest]:
+                     seed: int = 0,
+                     load_profile: Optional[str] = None) -> List[SimRequest]:
+    reqs, _ = production_trace_with_meta(
+        n_adapters, rps, duration, prompt_len=prompt_len,
+        output_len=output_len, seed=seed, load_profile=load_profile)
+    return reqs
+
+
+def production_trace_with_meta(n_adapters: int, rps: float,
+                               duration: float, prompt_len: int = 512,
+                               output_len: int = 128, seed: int = 0,
+                               load_profile: Optional[str] = None):
+    """Like :func:`production_trace` but also returns the generator's
+    ground truth: the per-adapter drift-pattern assignment (adapter_id
+    -> Fig 10 pattern; tail adapters are "stable") so drift detectors
+    can be validated against what the trace actually does, plus the
+    aggregate load profile. ``load_profile`` optionally modulates the
+    *aggregate* arrival rate with one of the ``_drift`` shapes (e.g.
+    "diurnal" for the day-night swing autoscaling exploits) via
+    Poisson thinning."""
     rng = random.Random(seed)
     adapters = make_adapters(n_adapters, seed=seed)
     by_rank = {}
@@ -53,17 +72,41 @@ def production_trace(n_adapters: int, rps: float, duration: float,
     # top-5: most popular adapter of each rank, drifting per Fig 10
     top5 = [by_rank[r][0] for r in sorted(by_rank)]
     drifts = ["rising", "falling", "diurnal", "stable", "surge"]
+    patterns = {a.adapter_id: "stable" for a in adapters}
+    for j, a in enumerate(top5):
+        patterns[a.adapter_id] = drifts[j % len(drifts)]
+
+    ranks = sorted(RANK_REQUEST_SHARE)
+
+    def rank_weights(progress: float) -> List[float]:
+        """Fig 15 rank share scaled by each rank-head's Fig 10 drift:
+        a surging adapter *adds* arrival intensity instead of merely
+        shifting within-rank share, so its absolute rate really surges
+        while stable adapters stay stable (the detector ground truth)."""
+        return [RANK_REQUEST_SHARE[r]
+                * ((1 - TOP5_SHARE) + TOP5_SHARE
+                   * _drift(patterns[by_rank[r][0].adapter_id], progress))
+                for r in ranks]
+
+    def load(progress: float) -> float:
+        return _drift(load_profile, progress) if load_profile else 1.0
+
+    # thinning peaks (drift shapes are bounded, 3x at most)
+    grid = [p / 100.0 for p in range(101)]
+    peak_i = max(sum(rank_weights(p)) for p in grid)
+    peak_l = max(load(p) for p in grid)
 
     reqs: List[SimRequest] = []
     t, i = 0.0, 0
     while t < duration:
-        t += rng.expovariate(rps)
+        t += rng.expovariate(rps * peak_i * peak_l)
         if t >= duration:
             break
         progress = t / duration
-        # rank by Fig 15 share
-        ranks = sorted(RANK_REQUEST_SHARE)
-        rw = [RANK_REQUEST_SHARE[r] for r in ranks]
+        rw = rank_weights(progress)
+        accept = (sum(rw) / peak_i) * (load(progress) / peak_l)
+        if rng.random() >= accept:
+            continue    # thinned: instantaneous intensity below peak
         rank = rng.choices(ranks, weights=rw)[0]
         pool = by_rank[rank]
         head = pool[0]
@@ -82,7 +125,9 @@ def production_trace(n_adapters: int, rps: float, duration: float,
         reqs.append(SimRequest(req_id=i, adapter_id=a.adapter_id, rank=rank,
                                prompt_len=pl, output_len=ol, arrival=t))
         i += 1
-    return reqs
+    meta = {"patterns": patterns, "adapters": adapters,
+            "load_profile": load_profile or "flat"}
+    return reqs, meta
 
 
 def production_adapters(n_adapters: int, seed: int = 0):
