@@ -1,0 +1,167 @@
+"""SGMV v2 microbenchmark: fused vs unfused kernel dispatch (tokens/s
+and dispatch counts) across rank-skew adapter mixes, plus the engine's
+fused multi-token decode (`decode_steps(k)`: host dispatches per token).
+
+Paths compared per mix (same weights; all outputs bit-identical):
+  * unfused       — `sgmv` on the max-rank padded bank (2 dispatches:
+                    shrink + expand, rank-r intermediate via HBM)
+  * fused         — `sgmv_fused` on the same bank (1 dispatch, VMEM
+                    intermediate)
+  * host_bucketed — `sgmv_rank_bucketed` (host loop: token_adapter sync
+                    + 2 dispatches per non-empty rank bucket)
+  * fused_bucketed— `sgmv_bucketed_fused` (1 dispatch total, each token
+                    at its own bucket's rank)
+
+Interpret-mode (CPU CI) numbers understate compiled-TPU wins; the
+`kernels/fused_speedup_*` rows are the acceptance metric
+(fused_bucketed vs unfused tokens/s on a rank-skewed mix). Caveat on
+`host_bucketed` interpret times: its host sync is free once the timing
+loop has the ids on host and its compacted sub-batches are smaller, so
+it can look fast here — but it is not jittable (cannot live inside the
+engine's traced step) and costs 2 launches per bucket; the fused path
+exists to remove exactly that.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (sgmv, sgmv_bucketed_fused, sgmv_fused,
+                           sgmv_rank_bucketed)
+
+from .common import emit
+
+# token share of the low-rank bucket per mix (rank-8 vs rank-128 pair)
+MIXES = {"skew_lowrank": 0.9375, "even": 0.5, "all_highrank": 0.0}
+
+
+def _bank(key, n, d, r, do):
+    kA, kB = jax.random.split(key)
+    return (jax.random.normal(kA, (n, d, r)) * 0.05,
+            jax.random.normal(kB, (n, r, do)) * 0.05)
+
+
+def _time_paths(paths, repeat):
+    """Median-of-rounds, rounds interleaved across paths (a paired
+    design): shared CI machines flip between fast and slow states that
+    persist for several calls, which scrambles sequential best-of-N
+    timings — but calls inside one short round share the machine state,
+    so per-round numbers are comparable and the median over rounds
+    discards the corrupted ones."""
+    import statistics
+    import time as _t
+    for fn in paths.values():
+        jax.block_until_ready(fn())          # warm the traces
+    rounds = {name: [] for name in paths}
+    for _ in range(repeat):
+        for name, fn in paths.items():
+            t0 = _t.perf_counter()
+            jax.block_until_ready(fn())
+            rounds[name].append(_t.perf_counter() - t0)
+    med = {name: statistics.median(ts) * 1e6
+           for name, ts in rounds.items()}
+    return med, rounds
+
+
+def _paired_speedup(rounds, a: str, b: str) -> float:
+    """Median of the per-round time ratios b/a (a's speedup over b)."""
+    import statistics
+    return statistics.median(tb / ta for ta, tb in
+                             zip(rounds[a], rounds[b]))
+
+
+def kernel_rows(fast: bool):
+    rows = []
+    # sizes/block_t where the rank-dependent dots and bank-block traffic
+    # dominate the per-grid-step interpreter floor, so the tokens/s
+    # ratios track the kernel design rather than framework overhead
+    T, d, do = (512, 2048, 2048) if fast else (2048, 4096, 4096)
+    bt = 64
+    repeat = 16
+    r_lo, r_hi = 8, 128
+    key = jax.random.PRNGKey(0)
+    kx, kb = jax.random.split(key)
+    x = jax.random.normal(kx, (T, d))
+    lo = _bank(kb, 2, d, r_lo, do)
+    hi = _bank(jax.random.fold_in(kb, 1), 2, d, r_hi, do)
+    # padded equivalent: all 4 adapters zero-padded to r_hi
+    Apad = jnp.concatenate([jnp.pad(lo[0], ((0, 0), (0, 0),
+                                            (0, r_hi - r_lo))), hi[0]])
+    Bpad = jnp.concatenate([jnp.pad(lo[1], ((0, 0), (0, r_hi - r_lo),
+                                            (0, 0))), hi[1]])
+    bucket = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    local = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    banks = (lo, hi)
+
+    speedups = {}
+    for mix, frac_lo in MIXES.items():
+        n_lo = int(T * frac_lo)
+        aid = jnp.asarray([i % 2 for i in range(n_lo)]
+                          + [2 + i % 2 for i in range(T - n_lo)],
+                          jnp.int32)
+        dispatches = {"unfused": 2, "fused": 1,
+                      "host_bucketed": 2 * (2 if 0 < n_lo < T else 1),
+                      "fused_bucketed": 1}
+        paths = {
+            "unfused": lambda a=aid: sgmv(
+                x, Apad, Bpad, a, block_t=bt, interpret=True),
+            "fused": lambda a=aid: sgmv_fused(
+                x, Apad, Bpad, a, block_t=bt, interpret=True),
+            "host_bucketed": lambda a=aid: sgmv_rank_bucketed(
+                x, banks, a, bucket, adapter_local=local, block_t=bt,
+                interpret=True),
+            "fused_bucketed": lambda a=aid: sgmv_bucketed_fused(
+                x, banks, a, bucket, local, block_t=bt, interpret=True),
+        }
+        us, rounds = _time_paths(paths, repeat)
+        tok_s = {name: T / (u * 1e-6) for name, u in us.items()}
+        for name in paths:
+            rows.append(emit(f"kernels/{mix}/{name}", us[name],
+                             f"tok_s={tok_s[name]:.0f};"
+                             f"dispatches={dispatches[name]}"))
+        speedups[mix] = (_paired_speedup(rounds, "fused_bucketed",
+                                         "unfused"),
+                         _paired_speedup(rounds, "fused", "unfused"))
+    for mix, (sb, sf) in speedups.items():
+        rows.append(emit(f"kernels/fused_speedup_{mix}", 0.0,
+                         f"bucketed_fused_vs_unfused={sb:.2f}x;"
+                         f"fused_vs_unfused={sf:.2f}x"))
+    return rows
+
+
+def engine_rows(fast: bool):
+    """decode_steps(k): host dispatches per decoded token, k=1 vs k=8."""
+    import time as _t
+
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_smoke_config("llama-7b-paper")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n_req, max_new = (6, 8) if fast else (12, 16)
+
+    per_tok = {}
+    rows = []
+    for k in (1, 8):
+        eng = ServingEngine(cfg, params, {"a-r8": 8, "b-r64": 64},
+                            max_batch=4, max_len=40, decode_block=k)
+        now = _t.monotonic()
+        for i in range(n_req):
+            eng.submit(Request(i, ["a-r8", "b-r64"][i % 2],
+                               list(range(1, 9)), max_new, arrival=now))
+        t0 = _t.perf_counter()
+        eng.run_until_drained()
+        us = (_t.perf_counter() - t0) * 1e6
+        per_tok[k] = eng.decode_dispatches / max(1, eng.tokens_decoded)
+        rows.append(emit(f"kernels/engine_decode_block{k}", us,
+                         f"decode_dispatches={eng.decode_dispatches};"
+                         f"tokens={eng.tokens_decoded};"
+                         f"dispatch_per_tok={per_tok[k]:.3f}"))
+    rows.append(emit("kernels/engine_dispatch_reduction", 0.0,
+                     f"k8_vs_k1={per_tok[1] / per_tok[8]:.1f}x"))
+    return rows
+
+
+def run(fast: bool = True):
+    return kernel_rows(fast) + engine_rows(fast)

@@ -12,9 +12,9 @@ import sys
 import time
 
 from . import (bench_ablation, bench_autoscale, bench_interference,
-               bench_kernel, bench_placement, bench_rank_skew,
-               bench_roofline, bench_scalability, bench_transfer,
-               bench_workloads)
+               bench_kernel, bench_kernels, bench_placement,
+               bench_rank_skew, bench_roofline, bench_scalability,
+               bench_transfer, bench_workloads)
 from .common import fmt_rows
 
 BENCHES = {
@@ -22,6 +22,7 @@ BENCHES = {
     "interference": lambda fast: bench_interference.run(),
     "transfer": bench_transfer.run,
     "kernel": lambda fast: bench_kernel.run(),
+    "kernels": bench_kernels.run,
     "placement": bench_placement.run,
     "workloads": bench_workloads.run,
     "scalability": bench_scalability.run,

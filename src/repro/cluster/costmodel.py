@@ -21,6 +21,16 @@ Calibration (derivation):
     charge the *sum of per-rank-bucket* costs instead of max(rank) — the
     cost-model mirror of rank-bucketed banks, used by ``SimServer`` when
     ``bank_mode="bucketed"``.
+  * Fused-kernel terms (SGMV v2): the calibration above IS the fused
+    single-dispatch kernel (one pass over the bank, LoRA intermediate
+    resident in on-chip memory). ``fused=False`` charges what the
+    legacy two-kernel / host-loop dispatchers additionally pay: the
+    rank-r shrink output round-tripping HBM (write+read per token per
+    target per layer) and the extra kernel launches (2 per application
+    unfused, 2·n_buckets for the host-loop bucketed dispatcher, vs 1
+    fused). ``steps=k`` amortizes the per-iteration scheduling floor
+    ITER_OVERHEAD over a k-token fused decode dispatch
+    (``ServingEngine.decode_steps``) — one host round-trip per k tokens.
 
 Hardware reference: A100 SXM 40GB (312 TF bf16, ~1.55 TB/s HBM), the
 paper's Standard_ND96asr_v4 nodes. The TPU deployment path of this repo
@@ -45,6 +55,8 @@ X1 = 0.016                   # lora factor per unit rank at TP=1, d=4096
 TP_BETA = 1.08
 DECODE_LORA_DAMP = 0.15
 ITER_OVERHEAD = 4.0e-3       # scheduling/kernel-launch floor per iteration
+DISPATCH_OVERHEAD = 5e-6     # per extra kernel launch (unfused paths)
+LORA_TARGETS = 4             # q/k/v/o LoRA applications per layer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,59 +77,94 @@ class ServerModel:
     def _prefill_per_token(self) -> float:
         return 2.0 * self.n_params / (self.tp * A100_FLOPS * MFU_PREFILL)
 
-    def prefill_time(self, n_tokens: int, max_rank: int) -> float:
-        """Seconds for one prefill iteration of `n_tokens` total tokens,
-        co-batched with max adapter rank `max_rank` (everyone pays it)."""
-        base = self._prefill_per_token() * n_tokens
-        return ITER_OVERHEAD + base * (1.0 + self.lora_factor(max_rank))
+    def _n_layers(self) -> float:
+        return 32 * (self.d_model / 4096.0)
 
-    def prefill_time_bucketed(self, bucket_tokens: Mapping[int, int]
-                              ) -> float:
+    def unfused_penalty(self, bucket_tokens: Mapping[int, int]) -> float:
+        """Extra seconds per iteration the legacy (pre-fused) SGMV
+        dispatchers pay vs the fused single dispatch: the rank-r shrink
+        intermediate round-tripping HBM (write + read, bf16, per token
+        per target per layer) plus the extra kernel launches — 2 per
+        LoRA application per bucket (shrink + expand, host-loop
+        dispatched per bucket) where the fused path launches 1 total."""
+        apps = self._n_layers() * LORA_TARGETS
+        inter_bytes = sum(2 * 2 * r * nt
+                          for r, nt in bucket_tokens.items()) * apps
+        launches = (2 * max(1, len(bucket_tokens)) - 1) * apps
+        return (inter_bytes / (self.tp * A100_HBM)
+                + launches * DISPATCH_OVERHEAD)
+
+    def prefill_time(self, n_tokens: int, max_rank: int, *,
+                     fused: bool = True) -> float:
+        """Seconds for one prefill iteration of `n_tokens` total tokens,
+        co-batched with max adapter rank `max_rank` (everyone pays it).
+        The calibration is the fused single-dispatch kernel;
+        ``fused=False`` adds the legacy dispatchers' penalty."""
+        base = self._prefill_per_token() * n_tokens
+        t = ITER_OVERHEAD + base * (1.0 + self.lora_factor(max_rank))
+        if not fused:
+            t += self.unfused_penalty({max_rank: n_tokens})
+        return t
+
+    def prefill_time_bucketed(self, bucket_tokens: Mapping[int, int], *,
+                              fused: bool = True) -> float:
         """Rank-bucketed prefill: `bucket_tokens` maps bucket rank ->
         token count in that bucket. The base model pass covers all tokens
         once; each bucket's LoRA overhead applies only to its own tokens
         at its own rank (sum of per-bucket costs), instead of every token
         paying `max(rank)` — strictly cheaper than `prefill_time` for any
-        batch mixing >= 2 rank buckets."""
+        batch mixing >= 2 rank buckets. ``fused=False`` models the
+        host-loop dispatcher (2 launches per bucket + HBM round-trip)."""
         per_tok = self._prefill_per_token()
         total = sum(bucket_tokens.values())
         lora = sum(nt * self.lora_factor(r)
                    for r, nt in bucket_tokens.items())
-        return ITER_OVERHEAD + per_tok * (total + lora)
+        t = ITER_OVERHEAD + per_tok * (total + lora)
+        if not fused:
+            t += self.unfused_penalty(dict(bucket_tokens))
+        return t
 
     def adapter_read_bytes(self, rank: int) -> float:
         """BGMV gather per request per decode iteration: A+B on 4 targets,
         every layer, bf16 — padded to the batch max rank (Punica BGMV
         semantics, §III-A.5)."""
-        n_layers = 32 * (self.d_model / 4096.0)
-        return 2 * 2 * 4 * self.d_model * rank * n_layers
+        return (2 * 2 * LORA_TARGETS * self.d_model * rank
+                * self._n_layers())
 
     def kv_read_bytes(self, seq_len: int = 512) -> float:
         """Per-request KV read per decode iteration: K+V, bf16, every
         layer, GQA KV width d_model/4 (8 KV heads x head_dim d/32 at the
         Llama-7B reference shape)."""
-        n_layers = 32 * (self.d_model / 4096.0)
         kv_width = self.d_model / 4.0
-        return 2 * 2 * n_layers * kv_width * seq_len
+        return 2 * 2 * self._n_layers() * kv_width * seq_len
 
     def decode_time(self, batch: int, max_rank: int,
-                    seq_len: int = 512) -> float:
+                    seq_len: int = 512, *, steps: int = 1,
+                    fused: bool = True) -> float:
         """Seconds for one decode iteration (1 token for every running
         request). Weight-read bound; KV + per-request max-rank adapter
-        gathers grow with batch."""
+        gathers grow with batch. ``steps=k`` models a k-token fused
+        decode dispatch (``decode_steps``): the per-iteration scheduling
+        floor is paid once per dispatch, i.e. ITER_OVERHEAD/k per
+        token-iteration."""
         weight_bytes = 2.0 * self.n_params
         kv_bytes = batch * self.kv_read_bytes(seq_len)
         lora_bytes = batch * self.adapter_read_bytes(max_rank)
         base = (weight_bytes + kv_bytes + lora_bytes) / (
             self.tp * A100_HBM * HBM_EFF_DECODE)
-        return ITER_OVERHEAD + base
+        t = ITER_OVERHEAD / max(1, steps) + base
+        if not fused:
+            t += self.unfused_penalty({max_rank: batch})
+        return t
 
     def decode_time_bucketed(self, bucket_batch: Mapping[int, int],
-                             seq_len: int = 512) -> float:
+                             seq_len: int = 512, *, steps: int = 1,
+                             fused: bool = True) -> float:
         """Rank-bucketed decode: `bucket_batch` maps bucket rank ->
         number of running requests in that bucket. Each request's adapter
         gather is at its own bucket rank (sum of per-bucket reads)
-        instead of the batch max."""
+        instead of the batch max. ``steps`` / ``fused`` as in
+        ``decode_time``."""
         batch = sum(bucket_batch.values())
         weight_bytes = 2.0 * self.n_params
         kv_bytes = batch * self.kv_read_bytes(seq_len)
@@ -125,7 +172,10 @@ class ServerModel:
                          for r, cnt in bucket_batch.items())
         base = (weight_bytes + kv_bytes + lora_bytes) / (
             self.tp * A100_HBM * HBM_EFF_DECODE)
-        return ITER_OVERHEAD + base
+        t = ITER_OVERHEAD / max(1, steps) + base
+        if not fused:
+            t += self.unfused_penalty(dict(bucket_batch))
+        return t
 
     # -- aggregates -------------------------------------------------------
     def prefill_token_rate(self, rank: int) -> float:

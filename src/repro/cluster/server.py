@@ -32,10 +32,13 @@ class SimServer:
     """State machine advanced by the cluster simulator's event loop."""
 
     def __init__(self, server_id: int, model: ServerModel,
-                 bank_mode: str = "padded"):
+                 bank_mode: str = "padded", decode_block: int = 1):
         self.sid = server_id
         self.model = model
         self.bank_mode = bank_mode
+        # mirrors ServingEngine(decode_block=): decode iterations are
+        # dispatched k at a time, amortizing the per-dispatch floor
+        self.decode_block = decode_block
         self.waiting: List[SimRequest] = []
         self.running: List[SimRequest] = []
         self.finished: List[SimRequest] = []   # completion feed; the
@@ -68,9 +71,11 @@ class SimServer:
         pen = self._remote_surcharge(running, now)
         if self.bank_mode == "bucketed":
             return pen + self.model.decode_time_bucketed(
-                _bucket_sums(running, lambda r: 1))
+                _bucket_sums(running, lambda r: 1),
+                steps=self.decode_block)
         return pen + self.model.decode_time(len(running),
-                                            max(r.rank for r in running))
+                                            max(r.rank for r in running),
+                                            steps=self.decode_block)
 
     # -- load introspection (used by Toppings routing) --------------------
     def estimated_work(self, now: float) -> float:

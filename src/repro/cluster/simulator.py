@@ -120,6 +120,7 @@ class ClusterSimulator:
                  warmup: float = 0.0,
                  seed: int = 0,
                  bank_mode: str = "padded",
+                 decode_block: int = 1,
                  access_mode: str = "migrate",
                  prefetch: bool = False,
                  network: Optional[NetworkModel] = None,
@@ -133,6 +134,7 @@ class ClusterSimulator:
         self.controller = controller
         self.provision_delay = provision_delay
         self.bank_mode = bank_mode
+        self.decode_block = decode_block
         self.access_mode = access_mode
         self.prefetch = prefetch
         self.n = n_servers
@@ -149,7 +151,8 @@ class ClusterSimulator:
         self.operating_points = profile_operating_points(self.model, ranks)
 
     def run(self, trace: List[SimRequest]) -> SimResult:
-        servers = [SimServer(i, self.model, bank_mode=self.bank_mode)
+        servers = [SimServer(i, self.model, bank_mode=self.bank_mode,
+                             decode_block=self.decode_block)
                    for i in range(self.n)]
         ctrl = self.controller
         if ctrl is not None:   # lazy: keeps controller-less sims light
@@ -398,7 +401,8 @@ class ClusterSimulator:
             elif kind == "provision":
                 sid = pool.add_server()
                 servers.append(SimServer(sid, self.model,
-                                         bank_mode=self.bank_mode))
+                                         bank_mode=self.bank_mode,
+                                         decode_block=self.decode_block))
                 active.add(sid)
                 provisioned_at[sid] = payload    # billed from request
                 do_rebalance(now)   # fold the new server into placement

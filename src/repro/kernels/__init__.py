@@ -1,12 +1,32 @@
 """SGMV LoRA kernels — the compute hot-spot the paper's systems (Punica /
 S-LoRA) optimize with custom kernels, adapted TPU-native (DESIGN.md §3)."""
-from .flash import flash_mha, flash_mha_ref
-from .ops import (bgmv, prepare_segments, sgmv, sgmv_rank_bucketed,
-                  sgmv_reference)
-from .ref import sgmv_expand_ref, sgmv_ref, sgmv_shrink_ref
-from .sgmv import sgmv_expand, sgmv_shrink
 
-__all__ = ["sgmv", "bgmv", "sgmv_rank_bucketed", "prepare_segments",
-           "sgmv_reference", "sgmv_ref", "sgmv_shrink_ref",
-           "sgmv_expand_ref", "sgmv_shrink", "sgmv_expand",
-           "flash_mha", "flash_mha_ref"]
+
+def default_interpret() -> bool:
+    """Pallas execution mode resolved from the JAX backend: compiled on
+    TPU, interpreted elsewhere (CPU/GPU test rigs). Every kernel entry
+    point defaults its ``interpret`` arg to None and resolves through
+    here, so TPU runs never silently fall back to the interpreter."""
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+from .flash import flash_mha, flash_mha_ref  # noqa: E402
+from .ops import (bgmv, prepare_segments, prepare_segments_bucketed,  # noqa: E402
+                  sgmv, sgmv_bucketed_fused, sgmv_fused,
+                  sgmv_rank_bucketed, sgmv_reference)
+from .ref import sgmv_expand_ref, sgmv_ref, sgmv_shrink_ref  # noqa: E402
+from .sgmv import (sgmv_expand, sgmv_fused_blocks,  # noqa: E402
+                   sgmv_multibank_blocks, sgmv_shrink)
+
+__all__ = ["sgmv", "bgmv", "sgmv_fused", "sgmv_rank_bucketed",
+           "sgmv_bucketed_fused", "prepare_segments",
+           "prepare_segments_bucketed", "sgmv_reference", "sgmv_ref",
+           "sgmv_shrink_ref", "sgmv_expand_ref", "sgmv_shrink",
+           "sgmv_expand", "sgmv_fused_blocks", "sgmv_multibank_blocks",
+           "flash_mha", "flash_mha_ref", "default_interpret",
+           "resolve_interpret"]

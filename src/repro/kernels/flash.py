@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -79,8 +81,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
                                              "block_k", "interpret"))
 def flash_mha(q, k, v, *, causal: bool = True, scale: float = None,
               block_q: int = 128, block_k: int = 128,
-              interpret: bool = True):
+              interpret=None):
     """q: (B, H, Sq, hd); k, v: (B, H, Sk, hd). Returns (B, H, Sq, hd)."""
+    interpret = resolve_interpret(interpret)
     B, H, Sq, hd = q.shape
     Sk = k.shape[2]
     scale = scale if scale is not None else 1.0 / (hd ** 0.5)

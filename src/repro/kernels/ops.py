@@ -2,12 +2,24 @@
 adapter, pad segments to whole blocks), kernel dispatch, and scatter-back.
 
 ``sgmv`` is the full LoRA delta y = (x @ A[aid]) @ B[aid] * scaling for a
-ragged multi-adapter token batch. ``bgmv`` is the decode special case
-(block_t=1, one token per block — Punica's BGMV).
+ragged multi-adapter token batch; ``sgmv_fused`` is the same contract on
+the fused shrink+expand kernel (one dispatch, no HBM round-trip for the
+rank-r intermediate). ``bgmv`` is the decode special case (block_t=1,
+one token per block — Punica's BGMV).
 
-A beyond-paper optimization lives here too: ``sgmv_rank_bucketed``
-dispatches each rank *bucket* with its own bank slice, avoiding the
-max-rank padding tax the paper identifies in BGMV/MBGMV (§Perf).
+Rank-bucketed dispatch (beyond-paper, avoiding the max-rank padding tax
+the paper identifies in BGMV/MBGMV batches, §Perf) comes in two forms:
+
+* ``sgmv_rank_bucketed`` — the legacy host-side dispatcher: syncs
+  ``token_adapter`` to host, compacts each bucket's tokens and launches
+  a shrink+expand pair per bucket (2·n_buckets dispatches, not
+  traceable under jit);
+* ``sgmv_bucketed_fused`` — the v2 path: ``prepare_segments_bucketed``
+  sorts tokens bucket-major (by (bucket, adapter)) ON DEVICE, and one
+  fused multi-bank kernel sweep serves every bucket at its own rank
+  (1 dispatch, fully jittable, stable trace across iterations — no host
+  sync, no per-bucket Python loop). Outputs are bit-identical to the
+  host-loop path.
 """
 from __future__ import annotations
 
@@ -16,31 +28,27 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import resolve_interpret
 from .ref import sgmv_ref
-from .sgmv import sgmv_expand, sgmv_shrink
+from .sgmv import (sgmv_expand, sgmv_fused_blocks, sgmv_multibank_blocks,
+                   sgmv_shrink)
 
 
-@functools.partial(jax.jit, static_argnames=("n_adapters", "block_t"))
-def prepare_segments(token_adapter, n_adapters: int, block_t: int = 16):
-    """Sort tokens by adapter; give each adapter a whole number of
-    ``block_t`` blocks.
-
-    Returns (dest, block_adapter, T_pad):
-      dest          : (T,) position of each (original-order) token in the
-                      padded, segment-blocked layout
-      block_adapter : (T_pad//block_t,) adapter id per block
-    T_pad is static: T rounded up + one spare block per adapter.
-    """
+def _prepare_core(token_adapter, key, n_keys: int, block_t: int,
+                  T_pad: int):
+    """Shared segment layout: sort tokens by ``key``, give each key a
+    whole number of ``block_t`` blocks. Returns (dest, block_adapter)
+    where ``block_adapter`` holds the *adapter id* of each block."""
     T = token_adapter.shape[0]
-    T_pad = padded_len(T, n_adapters, block_t)
-    order = jnp.argsort(token_adapter)                   # stable
+    order = jnp.argsort(key)                             # stable
     aid_s = token_adapter[order]
-    counts = jnp.bincount(token_adapter, length=n_adapters)
+    key_s = key[order]
+    counts = jnp.bincount(key, length=n_keys)
     padded = ((counts + block_t - 1) // block_t) * block_t
     offs = jnp.concatenate([jnp.zeros((1,), counts.dtype),
                             jnp.cumsum(padded)[:-1]])
-    rank = jnp.arange(T) - (jnp.cumsum(counts) - counts)[aid_s]
-    dest_sorted = offs[aid_s] + rank                     # (T,)
+    rank = jnp.arange(T) - (jnp.cumsum(counts) - counts)[key_s]
+    dest_sorted = offs[key_s] + rank                     # (T,)
     dest = jnp.zeros((T,), jnp.int32).at[order].set(
         dest_sorted.astype(jnp.int32))
     nblocks = T_pad // block_t
@@ -48,6 +56,41 @@ def prepare_segments(token_adapter, n_adapters: int, block_t: int = 16):
         (dest_sorted // block_t).astype(jnp.int32)].set(
             aid_s.astype(jnp.int32))
     return dest, block_adapter
+
+
+@functools.partial(jax.jit, static_argnames=("n_adapters", "block_t"))
+def prepare_segments(token_adapter, n_adapters: int, block_t: int = 16):
+    """Sort tokens by adapter; give each adapter a whole number of
+    ``block_t`` blocks.
+
+    Returns (dest, block_adapter):
+      dest          : (T,) position of each (original-order) token in the
+                      padded, segment-blocked layout
+      block_adapter : (T_pad//block_t,) adapter id per block
+    T_pad is static: T rounded up + one spare block per adapter.
+    """
+    T = token_adapter.shape[0]
+    T_pad = padded_len(T, n_adapters, block_t)
+    return _prepare_core(token_adapter, token_adapter, n_adapters,
+                         block_t, T_pad)
+
+
+@functools.partial(jax.jit, static_argnames=("n_adapters", "n_buckets",
+                                             "block_t"))
+def prepare_segments_bucketed(token_adapter, adapter_bucket,
+                              n_adapters: int, n_buckets: int = 1,
+                              block_t: int = 16):
+    """Bucket-major generalization: tokens sorted by (bucket, adapter)
+    so each rank bucket's blocks are contiguous, fully on device (no
+    host sync of ``token_adapter``). Same return contract and the same
+    static T_pad as ``prepare_segments`` — every adapter still belongs
+    to exactly one (bucket, adapter) key, so at most ``n_adapters``
+    partial blocks exist."""
+    T = token_adapter.shape[0]
+    T_pad = padded_len(T, n_adapters, block_t)
+    key = adapter_bucket[token_adapter] * n_adapters + token_adapter
+    return _prepare_core(token_adapter, key, n_buckets * n_adapters,
+                         block_t, T_pad)
 
 
 def padded_len(T: int, n_adapters: int, block_t: int) -> int:
@@ -58,7 +101,7 @@ def padded_len(T: int, n_adapters: int, block_t: int) -> int:
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret",
                                              "scaling"))
 def sgmv(x, A, B, token_adapter, *, scaling: float = 1.0,
-         block_t: int = 16, interpret: bool = True):
+         block_t: int = 16, interpret=None):
     """x: (T, d_in); A: (Na, d_in, r); B: (Na, r, d_out);
     token_adapter: (T,). Returns (T, d_out)."""
     T, d = x.shape
@@ -73,8 +116,25 @@ def sgmv(x, A, B, token_adapter, *, scaling: float = 1.0,
     return y_pad[dest] * scaling
 
 
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret",
+                                             "scaling"))
+def sgmv_fused(x, A, B, token_adapter, *, scaling: float = 1.0,
+               block_t: int = 16, interpret=None):
+    """``sgmv`` on the fused shrink+expand kernel: one dispatch, the
+    (block_t, r) intermediate never leaves VMEM. Bit-identical outputs
+    to ``sgmv`` (the scratch mirrors the unfused inter-kernel cast)."""
+    T, d = x.shape
+    Na = A.shape[0]
+    dest, block_adapter = prepare_segments(token_adapter, Na, block_t)
+    T_pad = padded_len(T, Na, block_t)
+    x_pad = jnp.zeros((T_pad, d), x.dtype).at[dest].set(x)
+    y_pad = sgmv_fused_blocks(x_pad, A, B, block_adapter, block_t=block_t,
+                              interpret=interpret)
+    return y_pad[dest] * scaling
+
+
 def bgmv(x, A, B, token_adapter, *, scaling: float = 1.0,
-         interpret: bool = True):
+         interpret=None):
     """Decode-time per-token gather (Punica BGMV): block_t = 1."""
     return sgmv(x, A, B, token_adapter, scaling=scaling, block_t=1,
                 interpret=interpret)
@@ -82,10 +142,12 @@ def bgmv(x, A, B, token_adapter, *, scaling: float = 1.0,
 
 def sgmv_rank_bucketed(x, banks, token_adapter, adapter_rank_bucket,
                        *, adapter_local=None, scaling: float = 1.0,
-                       block_t: int = 16, interpret: bool = True):
-    """Beyond-paper optimization: group adapters into rank buckets, each
-    with its own (A, B) bank pair at its *bucket* rank, so a rank-8 token
-    batched with a rank-128 token pays rank-8 compute, not rank-128.
+                       block_t: int = 16, interpret=None):
+    """Legacy host-side rank-bucketed dispatcher (kept as the oracle the
+    fused path is bit-compared against): group adapters into rank
+    buckets, each with its own (A, B) bank pair at its *bucket* rank, so
+    a rank-8 token batched with a rank-128 token pays rank-8 compute,
+    not rank-128.
 
     banks: list of (A_i, B_i) per bucket; adapter_rank_bucket: (Na,) int
     mapping adapter -> bucket; adapter_local: optional (Na,) mapping
@@ -97,7 +159,9 @@ def sgmv_rank_bucketed(x, banks, token_adapter, adapter_rank_bucket,
     *compacted* into a dense sub-batch and only that sub-batch runs
     through the SGMV kernels at the bucket's rank, then scatters back.
     Total FLOPs = sum_b T_b * (d*r_b + r_b*o) — each token pays its own
-    bucket — instead of the padded bank's T * max_r * (d+o).
+    bucket — instead of the padded bank's T * max_r * (d+o). Costs one
+    host sync plus 2 kernel launches per non-empty bucket; prefer
+    ``sgmv_bucketed_fused`` on the hot path.
     """
     import numpy as np
     T, d = x.shape
@@ -115,6 +179,39 @@ def sgmv_rank_bucketed(x, banks, token_adapter, adapter_rank_bucket,
                  scaling=scaling, block_t=block_t, interpret=interpret)
         out = out.at[sel].set(y.astype(out.dtype))
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret",
+                                             "scaling"))
+def sgmv_bucketed_fused(x, banks, token_adapter, adapter_bucket,
+                        adapter_local=None, *, scaling: float = 1.0,
+                        block_t: int = 16, interpret=None):
+    """Single-dispatch rank-bucketed SGMV: the whole LoRA delta for a
+    heterogeneous batch as ONE traced kernel sweep.
+
+    Same contract as ``sgmv_rank_bucketed`` (bit-identical outputs), but
+    ``token_adapter`` stays on device: ``prepare_segments_bucketed``
+    lays tokens out bucket-major, per-block (bucket, bank-row) metadata
+    is scalar-prefetched, and each block's dots run at its own bucket's
+    rank inside one kernel. Fully jittable — the trace is stable across
+    engine iterations for a fixed bank signature.
+    """
+    T, d = x.shape
+    banks = tuple((A, B) for A, B in banks)
+    Na = adapter_bucket.shape[0]
+    nb = len(banks)
+    token_adapter = jnp.asarray(token_adapter, jnp.int32)
+    dest, block_adapter = prepare_segments_bucketed(
+        token_adapter, adapter_bucket, Na, nb, block_t)
+    local = jnp.arange(Na, dtype=jnp.int32) if adapter_local is None \
+        else jnp.asarray(adapter_local, jnp.int32)
+    block_bucket = jnp.asarray(adapter_bucket, jnp.int32)[block_adapter]
+    block_row = local[block_adapter]
+    T_pad = padded_len(T, Na, block_t)
+    x_pad = jnp.zeros((T_pad, d), x.dtype).at[dest].set(x)
+    y_pad = sgmv_multibank_blocks(x_pad, banks, block_bucket, block_row,
+                                  block_t=block_t, interpret=interpret)
+    return y_pad[dest] * scaling
 
 
 def sgmv_reference(x, A, B, token_adapter, scaling: float = 1.0):

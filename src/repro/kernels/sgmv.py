@@ -15,6 +15,19 @@ VMEM budget per grid step (fp32):
   expand: block_t*r + r*block_o + block_t*block_o (block_o=2048: ~1.3 MB)
 Both well under the ~16 MB/core VMEM of TPU v5e; block shapes keep the
 MXU dims at multiples of 128 where the model dims allow.
+
+``sgmv_fused_blocks`` fuses the pair: one grid sweep computes the
+(block_t, r) shrink product into a VMEM scratch at the first output
+block of each token block and expands it over the output blocks while it
+is still resident — the rank-r intermediate never round-trips HBM and
+the dispatch count halves. ``sgmv_multibank_blocks`` generalizes that to
+a whole rank-bucketed bank set in ONE dispatch: per-block scalar-
+prefetched (bucket, bank-row) metadata steers each token block to its
+own bucket's A/B pair, and the kernel body branches (``pl.when``) to a
+dot at that bucket's OWN rank, so a rank-8 block pays rank-8 compute
+co-dispatched with rank-128 blocks. Non-matching buckets' index maps
+clamp to row 0 — with the bucket-major token layout consecutive grid
+steps then re-request the same block and the pipeline elides the fetch.
 """
 from __future__ import annotations
 
@@ -24,6 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from . import resolve_interpret
 
 
 def _shrink_kernel(aid_ref, x_ref, a_ref, o_ref):
@@ -42,9 +57,10 @@ def _expand_kernel(aid_ref, h_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
 def sgmv_shrink(x_pad, A, block_adapter, *, block_t: int = 16,
-                interpret: bool = True):
+                interpret=None):
     """x_pad: (T_pad, d) segment-blocked; A: (Na, d, r);
     block_adapter: (nblocks,) int32. Returns (T_pad, r)."""
+    interpret = resolve_interpret(interpret)
     T_pad, d = x_pad.shape
     Na, _, r = A.shape
     nblocks = T_pad // block_t
@@ -67,8 +83,9 @@ def sgmv_shrink(x_pad, A, block_adapter, *, block_t: int = 16,
 @functools.partial(jax.jit,
                    static_argnames=("block_t", "block_o", "interpret"))
 def sgmv_expand(h_pad, B, block_adapter, *, block_t: int = 16,
-                block_o: int = 2048, interpret: bool = True):
+                block_o: int = 2048, interpret=None):
     """h_pad: (T_pad, r); B: (Na, r, d_out). Returns (T_pad, d_out)."""
+    interpret = resolve_interpret(interpret)
     T_pad, r = h_pad.shape
     Na, _, d_out = B.shape
     bo = min(block_o, d_out)
@@ -92,4 +109,177 @@ def sgmv_expand(h_pad, B, block_adapter, *, block_t: int = 16,
         out_shape=jax.ShapeDtypeStruct((T_pad, d_out + pad_o), h_pad.dtype),
         interpret=interpret,
     )(block_adapter, h_pad, Bp)
+    return out[:, :d_out]
+
+
+# ---------------------------------------------------------------------------
+# Fused shrink+expand
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(aid_ref, x_ref, a_ref, b_ref, o_ref, h_ref):
+    # j (output-block dim) is the innermost grid dim: the shrink product
+    # is computed once per token block (j == 0) into VMEM scratch and
+    # stays resident for every output block — no HBM round-trip. The
+    # scratch holds x.dtype, mirroring the unfused path's inter-kernel
+    # cast so fused and unfused outputs are bit-identical.
+    @pl.when(pl.program_id(1) == 0)
+    def _():
+        h_ref[...] = jnp.dot(
+            x_ref[...], a_ref[0],
+            preferred_element_type=jnp.float32).astype(h_ref.dtype)
+
+    o_ref[...] = jnp.dot(
+        h_ref[...], b_ref[0],
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _fused_kernel_1ob(aid_ref, x_ref, a_ref, b_ref, o_ref):
+    # single-output-block specialization (d_out <= block_o): the shrink
+    # product lives in registers only — no scratch, no conditional
+    h = jnp.dot(x_ref[...], a_ref[0],
+                preferred_element_type=jnp.float32).astype(x_ref.dtype)
+    o_ref[...] = jnp.dot(h, b_ref[0],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_o", "interpret"))
+def sgmv_fused_blocks(x_pad, A, B, block_adapter, *, block_t: int = 16,
+                      block_o: int = 2048, interpret=None):
+    """Fused shrink+expand over a segment-blocked layout: one dispatch,
+    (block_t, r) intermediate kept in VMEM. Returns (T_pad, d_out)."""
+    interpret = resolve_interpret(interpret)
+    T_pad, d = x_pad.shape
+    Na, _, r = A.shape
+    d_out = B.shape[-1]
+    bo = min(block_o, d_out)
+    pad_o = (-d_out) % bo
+    Bp = jnp.pad(B, ((0, 0), (0, 0), (0, pad_o)))
+    n_ob = (d_out + pad_o) // bo
+    nblocks = T_pad // block_t
+    out = pl.pallas_call(
+        _fused_kernel if n_ob > 1 else _fused_kernel_1ob,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nblocks, n_ob),
+            in_specs=[
+                pl.BlockSpec((block_t, d), lambda i, j, aid: (i, 0)),
+                pl.BlockSpec((1, d, r), lambda i, j, aid: (aid[i], 0, 0)),
+                pl.BlockSpec((1, r, bo), lambda i, j, aid: (aid[i], 0, j)),
+            ],
+            out_specs=pl.BlockSpec((block_t, bo), lambda i, j, aid: (i, j)),
+            scratch_shapes=[] if n_ob == 1 else
+            [pltpu.VMEM((block_t, r), x_pad.dtype)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T_pad, d_out + pad_o), x_pad.dtype),
+        interpret=interpret,
+    )(block_adapter, x_pad, A, Bp)
+    return out[:, :d_out]
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-bank (rank-bucketed) kernel: ONE dispatch for all buckets
+# ---------------------------------------------------------------------------
+
+
+def _make_multibank_kernel(bucket_ranks, n_ob):
+    """Kernel factory closed over the static per-bucket ranks. The body
+    branches on the block's scalar-prefetched bucket id; only the
+    matching branch's dots execute, at that bucket's OWN rank — the
+    rank-aware FLOP profile of the host-loop dispatcher, without the
+    host loop. With one output block the shrink product stays in
+    registers; otherwise it parks in VMEM scratch across the j sweep."""
+    nb = len(bucket_ranks)
+
+    def kernel_1ob(bkt_ref, row_ref, x_ref, *refs):
+        o_ref = refs[2 * nb]
+        bkt = bkt_ref[pl.program_id(0)]
+        for b, r_b in enumerate(bucket_ranks):
+            a_ref, b_ref = refs[2 * b], refs[2 * b + 1]
+
+            @pl.when(bkt == b)
+            def _(a_ref=a_ref, b_ref=b_ref):
+                h = jnp.dot(x_ref[...], a_ref[0],
+                            preferred_element_type=jnp.float32
+                            ).astype(x_ref.dtype)
+                o_ref[...] = jnp.dot(h, b_ref[0],
+                                     preferred_element_type=jnp.float32
+                                     ).astype(o_ref.dtype)
+
+    def kernel(bkt_ref, row_ref, x_ref, *refs):
+        o_ref, h_ref = refs[2 * nb], refs[2 * nb + 1]
+        i, j = pl.program_id(0), pl.program_id(1)
+        bkt = bkt_ref[i]
+        for b, r_b in enumerate(bucket_ranks):
+            a_ref, b_ref = refs[2 * b], refs[2 * b + 1]
+
+            @pl.when((bkt == b) & (j == 0))
+            def _(a_ref=a_ref, r_b=r_b):
+                h_ref[:, :r_b] = jnp.dot(
+                    x_ref[...], a_ref[0],
+                    preferred_element_type=jnp.float32).astype(h_ref.dtype)
+
+            @pl.when(bkt == b)
+            def _(b_ref=b_ref, r_b=r_b):
+                o_ref[...] = jnp.dot(
+                    h_ref[:, :r_b], b_ref[0],
+                    preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    return kernel_1ob if n_ob == 1 else kernel
+
+
+def _bank_a_map(b):
+    # non-matching buckets clamp to row 0: consecutive grid steps (the
+    # layout is bucket-major) then request the same block and the fetch
+    # is elided by the pipeline.
+    return lambda i, j, bkt, row: (jnp.where(bkt[i] == b, row[i], 0), 0, 0)
+
+
+def _bank_b_map(b):
+    return lambda i, j, bkt, row: (jnp.where(bkt[i] == b, row[i], 0), 0, j)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_o", "interpret"))
+def sgmv_multibank_blocks(x_pad, banks, block_bucket, block_row, *,
+                          block_t: int = 16, block_o: int = 2048,
+                          interpret=None):
+    """One traced dispatch over a whole rank-bucketed bank set.
+
+    x_pad: (T_pad, d) bucket-major segment-blocked tokens; banks: tuple
+    of (A_b (Na_b, d, r_b), B_b (Na_b, r_b, d_out)) pairs in ascending
+    bucket order; block_bucket/block_row: (nblocks,) int32 scalar-
+    prefetched metadata (which bucket, which row of that bucket's bank).
+    Returns (T_pad, d_out)."""
+    interpret = resolve_interpret(interpret)
+    T_pad, d = x_pad.shape
+    d_out = banks[0][1].shape[-1]
+    ranks = tuple(A.shape[-1] for A, _ in banks)
+    bo = min(block_o, d_out)
+    pad_o = (-d_out) % bo
+    n_ob = (d_out + pad_o) // bo
+    nblocks = T_pad // block_t
+    in_specs = [pl.BlockSpec((block_t, d), lambda i, j, bkt, row: (i, 0))]
+    operands = [x_pad]
+    for b, (A, B) in enumerate(banks):
+        Bp = jnp.pad(B, ((0, 0), (0, 0), (0, pad_o)))
+        in_specs.append(pl.BlockSpec((1, d, ranks[b]), _bank_a_map(b)))
+        in_specs.append(pl.BlockSpec((1, ranks[b], bo), _bank_b_map(b)))
+        operands.extend([A, Bp])
+    out = pl.pallas_call(
+        _make_multibank_kernel(ranks, n_ob),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nblocks, n_ob),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_t, bo),
+                                   lambda i, j, bkt, row: (i, j)),
+            scratch_shapes=[] if n_ob == 1 else
+            [pltpu.VMEM((block_t, max(ranks)), x_pad.dtype)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T_pad, d_out + pad_o), x_pad.dtype),
+        interpret=interpret,
+    )(block_bucket, block_row, *operands)
     return out[:, :d_out]

@@ -66,6 +66,16 @@ def main():
                     choices=["padded", "bucketed"],
                     help="LoRA bank layout: max-rank padded (paper "
                          "baseline) or power-of-two rank buckets")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="decode tokens per fused host dispatch "
+                         "(ServingEngine.decode_steps(k); 1 = one "
+                         "round-trip per token)")
+    ap.add_argument("--lora-kernel", default="einsum",
+                    choices=["einsum", "sgmv"],
+                    help="LoRA delta execution form: gather-einsum "
+                         "(any backend) or the fused Pallas SGMV "
+                         "kernels (compiled on TPU, interpreted "
+                         "elsewhere)")
     ap.add_argument("--access-mode", default="migrate",
                     choices=["migrate", "remote-read"],
                     help="on a placement miss: block on the adapter "
@@ -117,7 +127,9 @@ def main():
 
     backend = EngineBackend(cfg, params, args.servers, max_batch=4,
                             max_len=args.prompt_len + args.max_new + 8,
-                            seed=args.seed, bank_mode=args.bank_mode)
+                            seed=args.seed, bank_mode=args.bank_mode,
+                            decode_block=args.decode_block,
+                            lora_kernel=args.lora_kernel)
     cluster = LoRAServeCluster(
         backend, adapters, policy=args.policy, network=NetworkModel(),
         rebalance_period=args.rebalance_period, seed=args.seed,

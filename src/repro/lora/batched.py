@@ -7,9 +7,14 @@ Two execution paths, each with a padded and a bucketed form:
     co-batch padding tax, faithfully); bucketed: one masked pass per rank
     bucket at the bucket's own rank (rows outside the bucket are zeroed),
     numerically identical to padded because padding is inert;
-  * Pallas SGMV (``repro.kernels.ops``) — TPU kernel path for token-major
-    flattened layouts, ``apply_bank_sgmv`` dispatching ``sgmv`` (padded)
-    or the token-compacting ``sgmv_rank_bucketed`` (bucketed).
+  * Pallas SGMV (``repro.kernels.ops``) — TPU kernel path. The fused v2
+    kernels are jittable end-to-end, so they serve BOTH the token-major
+    flattened entry point (``apply_bank_sgmv``) and the model's in-scan
+    LoRA callback: ``make_lora_cb(..., kernel="sgmv")`` flattens the
+    (B, S, d) activation to token-major rows and dispatches one fused
+    kernel per target — ``sgmv_fused`` for padded banks,
+    ``sgmv_bucketed_fused`` (single dispatch, every bucket at its own
+    rank) for bucketed banks.
 
 ``make_lora_cb`` is layout-polymorphic: a dict bank slice selects the
 padded path with ``idx: (Bt,)`` global adapter rows; a tuple of per-
@@ -21,7 +26,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.models.common import constrain
+from repro.models.common import constrain, rows_to_tokens, tokens_to_rows
 
 
 def lora_delta(x, A, B, idx, scaling: float = 1.0):
@@ -63,21 +68,61 @@ def lora_delta_bucketed(x, bucket_targets, idx, scaling: float = 1.0):
     return out
 
 
-def make_lora_cb(bank_layer, idx, scaling: float = 1.0):
+def _lora_delta_sgmv(x, target, idx, scaling, block_t, interpret):
+    """Padded-bank fused-kernel form of ``lora_delta``: token-major
+    flatten, one ``sgmv_fused`` dispatch, unflatten."""
+    from repro.kernels.ops import sgmv_fused
+    x2, (B_, S_) = rows_to_tokens(x)
+    tok = jnp.repeat(idx, S_)
+    y = sgmv_fused(x2, target["A"].astype(x.dtype),
+                   target["B"].astype(x.dtype), tok, scaling=scaling,
+                   block_t=block_t, interpret=interpret)
+    return constrain(tokens_to_rows(y, B_, S_), "batch", None, None)
+
+
+def _lora_delta_sgmv_bucketed(x, bucket_targets, idx, scaling, block_t,
+                              interpret):
+    """Bucketed fused-kernel form: every batch row is its own "adapter"
+    (adapter_bucket/adapter_local taken straight from the (Bt, 2) idx),
+    so the whole heterogeneous delta is ONE ``sgmv_bucketed_fused``
+    dispatch with each row's tokens at its own bucket's rank."""
+    from repro.kernels.ops import sgmv_bucketed_fused
+    x2, (B_, S_) = rows_to_tokens(x)
+    tok = jnp.repeat(jnp.arange(B_, dtype=jnp.int32), S_)
+    banks = tuple((t["A"].astype(x.dtype), t["B"].astype(x.dtype))
+                  for t in bucket_targets)
+    y = sgmv_bucketed_fused(x2, banks, tok, idx[:, 0], idx[:, 1],
+                            scaling=scaling, block_t=block_t,
+                            interpret=interpret)
+    return constrain(tokens_to_rows(y, B_, S_), "batch", None, None)
+
+
+def make_lora_cb(bank_layer, idx, scaling: float = 1.0, *,
+                 kernel: str = "einsum", block_t: int = 16,
+                 interpret=None):
     """Bind one layer's bank slice and per-row adapter indices into the
     projection hook used by the attention/ssm blocks.
 
     ``bank_layer`` is {target: {"A","B"}} for a padded bank, or a tuple
     of such dicts (one per rank bucket) for a bucketed bank; ``idx`` is
-    the matching ``LoRABank.lora_idx`` output."""
+    the matching ``LoRABank.lora_idx`` output. ``kernel`` selects the
+    execution form: "einsum" (gather-einsum, any backend) or "sgmv"
+    (fused Pallas kernels over the token-major flattening — jittable, so
+    it works inside the layer scan; compiled on TPU, interpreted
+    elsewhere per ``repro.kernels.default_interpret``)."""
     if bank_layer is None:
         return None
+    if kernel not in ("einsum", "sgmv"):
+        raise ValueError(f"unknown lora kernel {kernel!r}")
 
     if isinstance(bank_layer, (tuple, list)):
         def cb_bucketed(name, x):
             targets = [bk.get(name) for bk in bank_layer]
             if any(t is None for t in targets):
                 return 0.0
+            if kernel == "sgmv":
+                return _lora_delta_sgmv_bucketed(x, targets, idx, scaling,
+                                                 block_t, interpret)
             return lora_delta_bucketed(x, targets, idx, scaling)
 
         return cb_bucketed
@@ -86,6 +131,8 @@ def make_lora_cb(bank_layer, idx, scaling: float = 1.0):
         t = bank_layer.get(name)
         if t is None:
             return 0.0
+        if kernel == "sgmv":
+            return _lora_delta_sgmv(x, t, idx, scaling, block_t, interpret)
         return lora_delta(x, t["A"], t["B"], idx, scaling)
 
     return cb
@@ -93,22 +140,31 @@ def make_lora_cb(bank_layer, idx, scaling: float = 1.0):
 
 def apply_bank_sgmv(x, bank, name: str, layer: int, token_adapter, *,
                     scaling: float = 1.0, block_t: int = 16,
-                    interpret: bool = True):
+                    interpret=None, fused: bool = True):
     """Pallas path for token-major flattened layouts: x: (T, d) tokens,
     token_adapter: (T,) *global* adapter rows of ``bank`` (a LoRABank).
 
-    Padded banks dispatch one ``sgmv`` over the full token set at the
-    bank max rank; bucketed banks dispatch ``sgmv_rank_bucketed``, which
-    compacts each bucket's tokens and runs them at the bucket's own rank
-    (FLOPs = sum_b T_b * r_b * (d + o) instead of T * max_r * (d + o)).
+    Padded banks dispatch one ``sgmv_fused`` over the full token set at
+    the bank max rank; bucketed banks dispatch ``sgmv_bucketed_fused``,
+    a SINGLE traced kernel sweep in which each bucket's tokens run at
+    the bucket's own rank (FLOPs = sum_b T_b * r_b * (d + o) instead of
+    T * max_r * (d + o)). ``fused=False`` selects the legacy two-kernel
+    / host-loop dispatchers (kept for A/Bs; bit-identical outputs).
     """
-    from repro.kernels.ops import sgmv, sgmv_rank_bucketed
+    from repro.kernels.ops import (sgmv, sgmv_bucketed_fused, sgmv_fused,
+                                   sgmv_rank_bucketed)
     if bank.mode == "padded":
         t = bank.data[name]
-        return sgmv(x, t["A"][layer], t["B"][layer], token_adapter,
-                    scaling=scaling, block_t=block_t, interpret=interpret)
+        fn = sgmv_fused if fused else sgmv
+        return fn(x, t["A"][layer], t["B"][layer], token_adapter,
+                  scaling=scaling, block_t=block_t, interpret=interpret)
     banks = [(bk[name]["A"][layer], bk[name]["B"][layer])
              for bk in bank.data]
+    if fused:
+        return sgmv_bucketed_fused(x, banks, token_adapter,
+                                   bank.adapter_bucket,
+                                   bank.adapter_local, scaling=scaling,
+                                   block_t=block_t, interpret=interpret)
     return sgmv_rank_bucketed(x, banks, token_adapter, bank.adapter_bucket,
                               adapter_local=bank.adapter_local,
                               scaling=scaling, block_t=block_t,

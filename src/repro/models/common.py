@@ -152,6 +152,32 @@ def param_pspecs(params, model_axis: str = "model"):
 
 
 # ---------------------------------------------------------------------------
+# LoRA callback contract
+# ---------------------------------------------------------------------------
+# Blocks call ``lora(name, x) -> delta`` with x: (B, S, d_target) for a
+# projection target name in {"q","k","v","o"}; the callback owns the
+# adapter gather and returns the batched LoRA delta in x.dtype.
+# ``repro.lora.batched.make_lora_cb`` builds the callback from a bank
+# layer slice in either execution form (gather-einsum, or the fused
+# Pallas SGMV kernels over the token-major flattening below).
+
+LoRACallback = "Callable[[str, jax.Array], jax.Array]"
+
+
+def rows_to_tokens(x: jax.Array):
+    """(B, S, d) -> ((B*S, d), (B, S)): the token-major flattening the
+    SGMV kernel path consumes (row-major, so token t of row b sits at
+    b*S + t and per-row adapter ids repeat S times)."""
+    B, S, d = x.shape
+    return x.reshape(B * S, d), (B, S)
+
+
+def tokens_to_rows(y: jax.Array, B: int, S: int) -> jax.Array:
+    """Inverse of ``rows_to_tokens`` for the (B*S, d_out) kernel output."""
+    return y.reshape(B, S, y.shape[-1])
+
+
+# ---------------------------------------------------------------------------
 # Norms / rope / init
 # ---------------------------------------------------------------------------
 

@@ -218,13 +218,14 @@ def _bank_slice(bank, i=None):
 
 
 def _run_dense_full(cfg, params, x, positions, *, window, bank, lora_idx,
-                    remat, collect):
+                    remat, collect, lora_kernel="einsum"):
     has_bank = bank is not None
 
     def body(carry, inp):
         x, aux = carry
         bp, bk = inp if has_bank else (inp, None)
-        lora = make_lora_cb(bk, lora_idx) if bk is not None else None
+        lora = make_lora_cb(bk, lora_idx, kernel=lora_kernel) \
+            if bk is not None else None
         x, kv, a = _dense_block_full(cfg, bp, x, positions, window, lora)
         return (x, aux + a), (kv if collect else 0)
 
@@ -236,7 +237,7 @@ def _run_dense_full(cfg, params, x, positions, *, window, bank, lora_idx,
 
 
 def _run_vlm_full(cfg, params, x, positions, *, window, frontend, bank,
-                  lora_idx, remat, collect):
+                  lora_idx, remat, collect, lora_kernel="einsum"):
     n_cross = cfg.n_layers // cfg.cross_attn_every
     per = cfg.cross_attn_every - 1          # self layers per period
     sb = jax.tree.map(
@@ -290,7 +291,7 @@ def _run_audio_encoder(cfg, params, frames):
 
 
 def _run_audio_full(cfg, params, x, positions, *, window, frontend, bank,
-                    lora_idx, remat, collect):
+                    lora_idx, remat, collect, lora_kernel="einsum"):
     memory = _run_audio_encoder(cfg, params, frontend)
     xkv = jax.vmap(lambda bp: cross_kv(cfg, bp["cross"], memory))(
         params["dec_blocks"])
@@ -303,7 +304,8 @@ def _run_audio_full(cfg, params, x, positions, *, window, frontend, bank,
             bp, xk, xv, bk = inp
         else:
             (bp, xk, xv), bk = inp, None
-        lora = make_lora_cb(bk, lora_idx) if bk is not None else None
+        lora = make_lora_cb(bk, lora_idx, kernel=lora_kernel) \
+            if bk is not None else None
         h, kv = gqa_full(cfg, bp["attn"],
                          rmsnorm(x, bp["ln1"], cfg.rmsnorm_eps),
                          positions, window=window, lora=lora)
@@ -333,13 +335,13 @@ def _hybrid_segments(cfg):
 
 
 def _run_hybrid_full(cfg, params, x, positions, *, window, bank, lora_idx,
-                     remat, collect):
+                     remat, collect, lora_kernel="einsum"):
     B = x.shape[0]
     aux = jnp.zeros((), jnp.float32)
     kv_list = []
     state_list = []
     lora = make_lora_cb(_bank_slice(bank, 0) if bank is not None else None,
-                        lora_idx)
+                        lora_idx, kernel=lora_kernel)
 
     def mamba_body(x, inp):
         bp, st = inp
@@ -366,7 +368,8 @@ def _run_hybrid_full(cfg, params, x, positions, *, window, bank, lora_idx,
     return x, (kvs, states), aux
 
 
-def _run_rwkv_full(cfg, params, x, *, bank, lora_idx, remat, collect):
+def _run_rwkv_full(cfg, params, x, *, bank, lora_idx, remat, collect,
+                   lora_kernel="einsum"):
     B = x.shape[0]
     L = cfg.n_layers
     st0 = jax.tree.map(lambda t: jnp.broadcast_to(t, (L,) + t.shape),
@@ -374,7 +377,8 @@ def _run_rwkv_full(cfg, params, x, *, bank, lora_idx, remat, collect):
 
     def body(x, inp):
         bp, st, bk = inp
-        lora = make_lora_cb(bk, lora_idx) if bk is not None else None
+        lora = make_lora_cb(bk, lora_idx, kernel=lora_kernel) \
+            if bk is not None else None
         x, st2 = _rwkv_block(cfg, bp, x, st, lora)
         return x, st2
 
@@ -406,14 +410,14 @@ def _embed(cfg, params, tokens):
 
 
 def forward(cfg, params, tokens, *, frontend=None, bank=None, lora_idx=None,
-            window=None, remat=False):
+            window=None, remat=False, lora_kernel="einsum"):
     """Teacher-forced full-sequence forward. Returns (h (B,S,d), aux)."""
     window = cfg.sliding_window if window is None else window
     B, S = tokens.shape
     positions = jnp.arange(S)
     x = _embed(cfg, params, tokens)
     kw = dict(window=window, bank=bank, lora_idx=lora_idx, remat=remat,
-              collect=False)
+              collect=False, lora_kernel=lora_kernel)
     fam = cfg.family
     if fam in ("dense", "moe"):
         h, _, aux = _run_dense_full(cfg, params, x, positions, **kw)
@@ -428,7 +432,7 @@ def forward(cfg, params, tokens, *, frontend=None, bank=None, lora_idx=None,
     elif fam == "ssm":
         h, _, aux = _run_rwkv_full(cfg, params, x, bank=bank,
                                    lora_idx=lora_idx, remat=remat,
-                                   collect=False)
+                                   collect=False, lora_kernel=lora_kernel)
     else:
         raise ValueError(fam)
     return rmsnorm(h, params["ln_f"], cfg.rmsnorm_eps), aux
@@ -491,7 +495,7 @@ def _write_prefill_kv(kvs, cache_arr, window):
 
 def prefill(cfg, params, tokens, *, frontend=None, bank=None, lora_idx=None,
             cache_len: Optional[int] = None, window: Optional[int] = None,
-            cache_dtype=None):
+            cache_dtype=None, lora_kernel="einsum"):
     """Prefill a batch of same-length rows. Returns (last_logits (B,V), cache)."""
     window = cfg.sliding_window if window is None else window
     B, S = tokens.shape
@@ -499,7 +503,7 @@ def prefill(cfg, params, tokens, *, frontend=None, bank=None, lora_idx=None,
     positions = jnp.arange(S)
     x = _embed(cfg, params, tokens)
     kw = dict(window=window, bank=bank, lora_idx=lora_idx, remat=False,
-              collect=True)
+              collect=True, lora_kernel=lora_kernel)
     cache_dtype = cache_dtype or params["embed"].dtype
     enc_len = frontend.shape[1] if frontend is not None else None
     cache = init_cache(cfg, B, cache_len, cache_dtype, enc_len=enc_len)
@@ -535,7 +539,8 @@ def prefill(cfg, params, tokens, *, frontend=None, bank=None, lora_idx=None,
     elif fam == "ssm":
         h, states, _ = _run_rwkv_full(cfg, params, x, bank=bank,
                                       lora_idx=lora_idx, remat=False,
-                                      collect=True)
+                                      collect=True,
+                                      lora_kernel=lora_kernel)
         cache["wkv"] = states["wkv"]
         cache["x_tm"] = states["x_tm"].astype(cache_dtype)
         cache["x_cm"] = states["x_cm"].astype(cache_dtype)
@@ -549,7 +554,8 @@ def prefill(cfg, params, tokens, *, frontend=None, bank=None, lora_idx=None,
 
 
 def decode_step(cfg, params, cache, tokens, *, bank=None, lora_idx=None,
-                window: Optional[int] = None, mla_absorbed=False):
+                window: Optional[int] = None, mla_absorbed=False,
+                lora_kernel="einsum"):
     """One decode step. tokens: (B,) int32. Returns (logits (B,V), cache)."""
     window = cfg.sliding_window if window is None else window
     pos = cache["pos"]
@@ -571,7 +577,8 @@ def decode_step(cfg, params, cache, tokens, *, bank=None, lora_idx=None,
                 bp, bk = inp
             else:
                 bp, bk = inp, None
-            lora = make_lora_cb(bk, lora_idx) if bk is not None else None
+            lora = make_lora_cb(bk, lora_idx, kernel=lora_kernel) \
+                if bk is not None else None
             kc = jax.lax.dynamic_index_in_dim(ck, i, 0, keepdims=False)
             vc = jax.lax.dynamic_index_in_dim(cv, i, 0, keepdims=False)
             x, kc, vc = _dense_block_decode(cfg, bp, x, kc, vc, pos,
@@ -637,7 +644,7 @@ def decode_step(cfg, params, cache, tokens, *, bank=None, lora_idx=None,
         kv_k, kv_v = [], []
         states = []
         lora = make_lora_cb(_bank_slice(bank, 0) if bank is not None else
-                            None, lora_idx)
+                            None, lora_idx, kernel=lora_kernel)
         segs = _hybrid_segments(cfg)
 
         def mamba_body(x, inp):
@@ -665,7 +672,8 @@ def decode_step(cfg, params, cache, tokens, *, bank=None, lora_idx=None,
     elif fam == "ssm":
         def body(x, inp):
             bp, wkv, x_tm, x_cm, bk = inp
-            lora = make_lora_cb(bk, lora_idx) if bank is not None else None
+            lora = make_lora_cb(bk, lora_idx, kernel=lora_kernel) \
+                if bank is not None else None
             st = {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}
             x, st2 = _rwkv_block(cfg, bp, x, st, lora)
             return x, (st2["wkv"], st2["x_tm"], st2["x_cm"])

@@ -115,13 +115,15 @@ class SimBackend:
     def __init__(self, n_servers: int, server_model=None,
                  timeout: float = 120.0,
                  adapter_nbytes: Optional[Dict[str, int]] = None,
-                 bank_mode: str = "padded"):
+                 bank_mode: str = "padded", decode_block: int = 1):
         from repro.cluster.costmodel import ServerModel
         from repro.cluster.server import SimServer
         self.n_servers = n_servers
         self.bank_mode = bank_mode
+        self.decode_block = decode_block
         self.model = server_model or ServerModel()
-        self.servers = [SimServer(i, self.model, bank_mode=bank_mode)
+        self.servers = [SimServer(i, self.model, bank_mode=bank_mode,
+                                  decode_block=decode_block)
                         for i in range(n_servers)]
         self.timeout = timeout
         self._nbytes = adapter_nbytes or {}
@@ -223,7 +225,8 @@ class SimBackend:
         sid = self.n_servers
         self.n_servers += 1
         self.servers.append(SimServer(sid, self.model,
-                                      bank_mode=self.bank_mode))
+                                      bank_mode=self.bank_mode,
+                                      decode_block=self.decode_block))
         self._hosted.append({})
         self._remote.append(set())
         return sid
@@ -266,13 +269,16 @@ class EngineBackend:
     def __init__(self, cfg, params, n_servers: int, *,
                  max_batch: int = 4, max_len: int = 64, seed: int = 0,
                  timeout: float = 120.0, page_pool_factory=None,
-                 bank_mode: str = "padded"):
+                 bank_mode: str = "padded", decode_block: int = 1,
+                 lora_kernel: str = "einsum"):
         from .engine import ServingEngine
         self._engine_cls = ServingEngine
         self.cfg = cfg
         self.params = params
         self.n_servers = n_servers
         self.bank_mode = bank_mode
+        self.decode_block = decode_block
+        self.lora_kernel = lora_kernel
         self.max_batch = max_batch
         self.max_len = max_len
         self.seed = seed
@@ -368,6 +374,8 @@ class EngineBackend:
                 self.cfg, self.params, dict(adapter_ranks),
                 max_batch=self.max_batch, max_len=self.max_len,
                 seed=self.seed, bank_mode=self.bank_mode,
+                decode_block=self.decode_block,
+                lora_kernel=self.lora_kernel,
                 page_pool=pool, clock=self.wall_now)
         else:
             self.engines[server_id].load_adapters(adapter_ranks)

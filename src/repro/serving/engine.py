@@ -3,10 +3,16 @@ heterogeneous LoRA adapters applied through the batched bank (the real
 compute path — co-batched requests genuinely pay the bank's max rank, so
 the paper's interference is physically measurable here, not just modeled).
 
-Prefill runs per-request (B=1, exact length — no padding pollution for
-SSM state); decode runs one jitted step for the whole slot batch. Each
-slot row carries its own cache position; free slots drop their writes
-(out-of-bounds scatter semantics).
+Prefill admission is batched: queued prompts of the SAME length are
+packed into one prefill call (exact length — no padding pollution for
+SSM state) and their cache rows scattered into slots in one fused merge.
+Decode runs one jitted step for the whole slot batch; ``decode_steps(k)``
+fuses k of them into a single host dispatch (``jax.lax.scan`` over the
+decode step with on-device argmax and per-slot remaining-token
+bookkeeping, cache donated through the scan), so decode costs one host
+round-trip per k tokens instead of per token. Each slot row carries its
+own cache position; free slots drop their writes (out-of-bounds scatter
+semantics).
 
 The engine is *placement-aware*: its bank holds only the adapters the
 orchestrator placed (or fetched) onto this server, padded to that
@@ -28,6 +34,7 @@ from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.lora.adapter import Adapter
 from repro.lora.bank import build_bank
@@ -44,11 +51,14 @@ class ServingEngine:
     def __init__(self, cfg, params, adapter_ranks: Dict[str, int],
                  *, max_batch: int = 8, max_len: int = 512,
                  seed: int = 0, scaling: float = 1.0,
-                 bank_mode: str = "padded",
+                 bank_mode: str = "padded", decode_block: int = 1,
+                 lora_kernel: str = "einsum",
                  page_pool: Optional[UnifiedPagePool] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
         self.bank_mode = bank_mode
+        self.decode_block = decode_block
+        self.lora_kernel = lora_kernel
         self.page_pool = page_pool
         self.params = params
         self.max_batch = max_batch
@@ -63,6 +73,10 @@ class ServingEngine:
         self.completed: List[ServeRequest] = []
         self._iter = 0
         self.bank_rebuilds = 0
+        # host-dispatch telemetry (bench_kernels: dispatches per token)
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+        self.tokens_decoded = 0
 
         self.adapter_ranks: Dict[str, int] = {}
         self._rebuild_bank(dict(adapter_ranks))
@@ -74,24 +88,27 @@ class ServingEngine:
                                   jnp.float32, enc_len=enc_len)
 
         cfgc = cfg
+        kern = lora_kernel
 
         def _decode(params, cache, tokens, bank, idx):
             return M.decode_step(cfgc, params, cache, tokens, bank=bank,
-                                 lora_idx=idx)
+                                 lora_idx=idx, lora_kernel=kern)
 
         self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._decode_k_cache = {}
 
-        def _merge(cache, cache1, slot, pos):
+        def _merge_many(cache, cache1, slots, pos):
+            # scatter n freshly-prefilled rows (batch axis 1 everywhere
+            # but "pos") into their slots in one fused update
             out = {}
             for k, v in cache.items():
                 if k == "pos":
-                    out[k] = v.at[slot].set(pos)
+                    out[k] = v.at[slots].set(pos)
                 else:
-                    out[k] = jax.lax.dynamic_update_index_in_dim(
-                        v, cache1[k][:, 0].astype(v.dtype), slot, axis=1)
+                    out[k] = v.at[:, slots].set(cache1[k].astype(v.dtype))
             return out
 
-        self._merge = jax.jit(_merge, donate_argnums=(0,))
+        self._merge_many = jax.jit(_merge_many, donate_argnums=(0,))
         self._prefill_cache = {}
 
     # -- placement-aware bank management --------------------------------
@@ -101,12 +118,16 @@ class ServingEngine:
         self.lora_bank = build_bank(self.cfg, adapter_ranks, self._bank_key,
                                     mode=self.bank_mode, n_layers=n_layers)
         self.adapter_ids = list(self.lora_bank.adapter_ids)
+        # O(1) id -> bank-row lookups on the admit path (rebuilt here, the
+        # only place the layout changes)
+        self._adapter_idx = {aid: i
+                             for i, aid in enumerate(self.adapter_ids)}
         self.ranks = list(self.lora_bank.ranks)
         self.max_rank = self.lora_bank.max_rank  # padding = subset max
         self.bank = self.lora_bank.data
         self.bank_rebuilds += 1
         # remap adapter indices of co-batched slots to the new bank layout
-        idx = [self.adapter_ids.index(r.adapter_id) if r is not None else 0
+        idx = [self._adapter_idx[r.adapter_id] if r is not None else 0
                for r in self.slots]
         self.slot_adapter = jnp.asarray(idx, jnp.int32)
         self._slot_lora = self.lora_bank.lora_idx(self.slot_adapter)
@@ -167,7 +188,7 @@ class ServingEngine:
         self.queue.append(req)
 
     def _adapter_index(self, adapter_id: str) -> int:
-        return self.adapter_ids.index(adapter_id)
+        return self._adapter_idx[adapter_id]
 
     def _prefill_fn(self, length: int):
         # keyed by (prompt length, bank layout signature): bank reshapes
@@ -176,66 +197,114 @@ class ServingEngine:
         key = (length,) + self.lora_bank.signature
         if key not in self._prefill_cache:
             cfg = self.cfg
+            kern = self.lora_kernel
 
             def _prefill(params, tokens, bank, idx, frontend=None):
                 return M.prefill(cfg, params, tokens, frontend=frontend,
                                  bank=bank, lora_idx=idx,
                                  cache_len=self.max_len,
-                                 cache_dtype=jnp.float32)
+                                 cache_dtype=jnp.float32,
+                                 lora_kernel=kern)
 
             self._prefill_cache[key] = jax.jit(_prefill)
         return self._prefill_cache[key]
 
     def _admit(self, now: float) -> None:
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            aidx = self._adapter_index(req.adapter_id)
+        free = [s for s in range(self.max_batch) if self.slots[s] is None]
+        if not free or not self.queue:
+            return
+        take = self.queue[:len(free)]
+        del self.queue[:len(take)]
+        # batched prefill admission: FIFO-assign slots, then pack the
+        # admitted prompts into same-length groups — one prefill call
+        # per group (B = group size, exact length: no padding pollution
+        # for SSM state) instead of B=1 each
+        groups: Dict[int, list] = {}
+        for req in take:
+            slot = free.pop(0)
+            groups.setdefault(len(req.prompt), []).append((slot, req))
+        for length, grp in groups.items():
+            self._prefill_group(length, grp)
+        # slot -> (bucket, local) bank indices recomputed ONCE per admit
+        # pass, not once per admitted slot
+        self._slot_lora = self.lora_bank.lora_idx(self.slot_adapter)
+
+    def _prefill_group(self, length: int, grp) -> None:
+        n = len(grp)
+        aidx = []
+        for slot, req in grp:
+            ai = self._adapter_idx[req.adapter_id]
+            aidx.append(ai)
             if self.page_pool is not None:
                 # unified paging: KV pages for the sequence + the
                 # adapter's pages (paged in on first use, pinned while
                 # co-batched)
-                self.page_pool.alloc_kv(f"req{req.req_id}",
-                                        len(req.prompt))
+                self.page_pool.alloc_kv(f"req{req.req_id}", length)
                 # footprint from the same formula the cluster/placement
                 # accounting uses, not an ad-hoc per-target guess; hybrid
                 # banks hold a single shared-attn LoRA layer, so the
                 # per-layer share is what this server actually pages in
                 nbytes = Adapter(req.adapter_id,
-                                 self.ranks[aidx]).nbytes(self.cfg)
+                                 self.ranks[ai]).nbytes(self.cfg)
                 if self.cfg.family == "hybrid":
                     nbytes = max(1, nbytes // self.cfg.n_layers)
                 self.page_pool.ensure_adapter(req.adapter_id, nbytes)
                 self.page_pool.pin_adapter(req.adapter_id)
-            toks = jnp.asarray([req.prompt], jnp.int32)
-            frontend = None
-            if self.cfg.family == "vlm":
-                frontend = jnp.zeros(
-                    (1, self.cfg.n_frontend_tokens, self.cfg.d_model))
-            if self.cfg.family == "audio":
-                frontend = jnp.zeros(
-                    (1, self.cfg.encoder.n_frames, self.cfg.d_model))
-            fn = self._prefill_fn(len(req.prompt))
-            lidx = self.lora_bank.lora_idx(jnp.asarray([aidx], jnp.int32))
-            if frontend is not None:
-                logits, cache1 = fn(self.params, toks, self.bank, lidx,
-                                    frontend)
-            else:
-                logits, cache1 = fn(self.params, toks, self.bank, lidx)
-            first = int(jnp.argmax(logits[0]))
-            self.cache = self._merge(self.cache, cache1, slot,
-                                     len(req.prompt))
-            self.slot_adapter = self.slot_adapter.at[slot].set(aidx)
-            self._slot_lora = self.lora_bank.lora_idx(self.slot_adapter)
-            self.last_token = self.last_token.at[slot].set(first)
+        toks = jnp.asarray([req.prompt for _, req in grp], jnp.int32)
+        frontend = None
+        if self.cfg.family == "vlm":
+            frontend = jnp.zeros(
+                (n, self.cfg.n_frontend_tokens, self.cfg.d_model))
+        if self.cfg.family == "audio":
+            frontend = jnp.zeros(
+                (n, self.cfg.encoder.n_frames, self.cfg.d_model))
+        fn = self._prefill_fn(length)
+        lidx = self.lora_bank.lora_idx(jnp.asarray(aidx, jnp.int32))
+        if frontend is not None:
+            logits, cache1 = fn(self.params, toks, self.bank, lidx,
+                                frontend)
+        else:
+            logits, cache1 = fn(self.params, toks, self.bank, lidx)
+        self.prefill_dispatches += 1
+        firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        slots = jnp.asarray([slot for slot, _ in grp], jnp.int32)
+        self.cache = self._merge_many(self.cache, cache1, slots,
+                                      jnp.full((n,), length, jnp.int32))
+        self.slot_adapter = self.slot_adapter.at[slots].set(
+            jnp.asarray(aidx, jnp.int32))
+        self.last_token = self.last_token.at[slots].set(
+            jnp.asarray(firsts))
+        t = self._clock()
+        for i, (slot, req) in enumerate(grp):
             req.phase = Phase.DECODE
             req.slot = slot
-            req.output.append(first)
-            t = self._clock()
+            req.output.append(int(firsts[i]))
             req.t_first_token = t
             req.prefill_done = t
             self.slots[slot] = req
+
+    def _finish_token(self, slot: int, req: ServeRequest, token: int,
+                      now: float) -> None:
+        """Record one decoded token for a slot; free the slot if done."""
+        req.output.append(token)
+        self.tokens_decoded += 1
+        if self.page_pool is not None:
+            self.page_pool.grow_kv(f"req{req.req_id}",
+                                   len(req.prompt) + len(req.output))
+        done = len(req.output) >= req.max_new_tokens
+        if done or len(req.prompt) + len(req.output) >= self.max_len:
+            req.phase = Phase.DONE
+            req.t_finish = now
+            req.finish = now
+            self.metrics.record(req)
+            self.completed.append(req)
+            self.slots[slot] = None
+            if self.page_pool is not None:
+                self.page_pool.free_kv(f"req{req.req_id}")
+                if not any(r is not None and
+                           r.adapter_id == req.adapter_id
+                           for r in self.slots):
+                    self.page_pool.pin_adapter(req.adapter_id, False)
 
     def _decode_once(self) -> None:
         if not any(s is not None for s in self.slots):
@@ -245,34 +314,93 @@ class ServingEngine:
             self._slot_lora)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.last_token = nxt
+        self.decode_dispatches += 1
         now = self._clock()
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
-            req.output.append(int(nxt[slot]))
-            if self.page_pool is not None:
-                self.page_pool.grow_kv(f"req{req.req_id}",
-                                       len(req.prompt) + len(req.output))
-            done = len(req.output) >= req.max_new_tokens
-            if done or len(req.prompt) + len(req.output) >= self.max_len:
-                req.phase = Phase.DONE
-                req.t_finish = now
-                req.finish = now
-                self.metrics.record(req)
-                self.completed.append(req)
-                self.slots[slot] = None
-                if self.page_pool is not None:
-                    self.page_pool.free_kv(f"req{req.req_id}")
-                    if not any(r is not None and
-                               r.adapter_id == req.adapter_id
-                               for r in self.slots):
-                        self.page_pool.pin_adapter(req.adapter_id, False)
+            self._finish_token(slot, req, int(nxt[slot]), now)
         self._iter += 1
 
+    # -- multi-token decode steps ---------------------------------------
+    def _decode_k_fn(self, k: int):
+        """jitted k-step fused decode, cached per k (and retraced per
+        bank signature by jit itself)."""
+        if k not in self._decode_k_cache:
+            cfg = self.cfg
+            kern = self.lora_kernel
+
+            def _decode_k(params, cache, tokens, bank, idx, steps_left):
+                def body(carry, _):
+                    cache, tok, left = carry
+                    logits, cache = M.decode_step(cfg, params, cache, tok,
+                                                  bank=bank, lora_idx=idx,
+                                                  lora_kernel=kern)
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    active = left > 0
+                    # rows past their budget freeze: their cache keeps
+                    # advancing (writes are dropped on host) but the
+                    # emitted token repeats and is discarded
+                    nxt = jnp.where(active, nxt, tok)
+                    return (cache, nxt, left - active.astype(left.dtype)), \
+                        nxt
+
+                (cache, tok, left), toks = jax.lax.scan(
+                    body, (cache, tokens, steps_left), None, length=k)
+                return cache, tok, toks
+
+            self._decode_k_cache[k] = jax.jit(_decode_k,
+                                              donate_argnums=(1,))
+        return self._decode_k_cache[k]
+
+    def decode_steps(self, k: int) -> int:
+        """Run ``k`` decode iterations in ONE host dispatch: a
+        ``lax.scan`` over the fused decode step with on-device argmax and
+        per-slot remaining-token bookkeeping, cache donated through the
+        scan. Returns the number of fused iterations run. Token streams
+        are identical to ``k`` single ``step()`` calls; only admission
+        granularity (every k tokens instead of every token) and finish-
+        timestamp granularity are coarser."""
+        if not any(s is not None for s in self.slots):
+            return 0
+        left = [0] * self.max_batch
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            # mirror _decode_once: an active slot always decodes at
+            # least one more token, then finishes on whichever budget
+            # (max_new_tokens or max_len) it crosses first
+            left[slot] = max(1, min(req.max_new_tokens - len(req.output),
+                                    self.max_len - len(req.prompt)
+                                    - len(req.output)))
+        # always dispatch the full k-step scan (rows past their budget
+        # freeze on device): one trace per (k, bank signature) instead
+        # of retracing for every distinct tail length
+        fn = self._decode_k_fn(k)
+        self.cache, self.last_token, toks = fn(
+            self.params, self.cache, self.last_token, self.bank,
+            self._slot_lora, jnp.asarray(left, jnp.int32))
+        self.decode_dispatches += 1
+        toks_np = np.asarray(toks)          # ONE host sync per k tokens
+        now = self._clock()
+        for step in range(k):
+            for slot, req in enumerate(self.slots):
+                if req is None or step >= left[slot]:
+                    continue
+                self._finish_token(slot, req, int(toks_np[step, slot]),
+                                   now)
+        self._iter += k
+        return k
+
     def step(self) -> None:
-        """One engine iteration: admit then decode (prefill-prioritized)."""
+        """One engine iteration: admit then decode (prefill-prioritized).
+        With ``decode_block > 1`` each step decodes up to that many
+        tokens per slot in a single fused host dispatch."""
         self._admit(self._clock())
-        self._decode_once()
+        if self.decode_block > 1:
+            self.decode_steps(self.decode_block)
+        else:
+            self._decode_once()
 
     def drain_completed(self) -> List[ServeRequest]:
         done, self.completed = self.completed, []

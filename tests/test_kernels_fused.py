@@ -1,0 +1,334 @@
+"""SGMV v2: fused shrink+expand and single-dispatch bucketed kernels
+(bit-identical to the legacy two-kernel / host-loop paths), bucket-major
+segment prep, the engine's fused multi-token decode (`decode_steps`),
+batched prefill admission, and the mirrored cost-model terms."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (prepare_segments_bucketed, sgmv,
+                           sgmv_bucketed_fused, sgmv_fused,
+                           sgmv_rank_bucketed, sgmv_reference)
+from repro.kernels.ops import padded_len
+
+# ---------------------------------------------------------------------------
+# sgmv_fused vs sgmv vs reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,d,r,do,Na,bt", [
+    (7, 128, 8, 128, 2, 8),
+    (63, 512, 64, 256, 5, 16),
+    (16, 128, 128, 1024, 3, 4),     # d_out > block_o exercises n_ob > 1
+    (1, 128, 8, 128, 1, 8),
+    (48, 384, 32, 384, 6, 1),       # bt=1 == BGMV
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sgmv_fused_matches_unfused_bitwise(T, d, r, do, Na, bt, dtype):
+    key = jax.random.PRNGKey(T * 7 + d)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (T, d)).astype(dtype)
+    A = (jax.random.normal(ks[1], (Na, d, r)) * 0.05).astype(dtype)
+    B = (jax.random.normal(ks[2], (Na, r, do)) * 0.05).astype(dtype)
+    aid = jax.random.randint(ks[3], (T,), 0, Na)
+    y_u = np.asarray(sgmv(x, A, B, aid, block_t=bt, interpret=True))
+    y_f = np.asarray(sgmv_fused(x, A, B, aid, block_t=bt, interpret=True))
+    np.testing.assert_array_equal(y_u, y_f)   # the fused contract
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    y_r = np.asarray(sgmv_reference(x, A, B, aid), np.float32)
+    np.testing.assert_allclose(np.asarray(y_f, np.float32), y_r,
+                               atol=tol, rtol=tol)
+
+
+def _mixed_setup(seed=3, T=29, d=128, do=256):
+    """3 buckets (ranks 8/16/64), 5 adapters, ragged token mix; returns
+    compact per-bucket banks + the equivalent max-rank padded bank."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    x = jax.random.normal(ks[0], (T, d))
+    banks, Apad, Bpad = [], [], []
+    ranks = [8, 16, 64]
+    members = [[0, 2], [3], [1, 4]]       # adapter -> bucket layout
+    for b, r in enumerate(ranks):
+        n = len(members[b])
+        A = jax.random.normal(ks[2 * b + 1], (n, d, r)) * 0.1
+        B = jax.random.normal(ks[2 * b + 2], (n, r, do)) * 0.1
+        banks.append((A, B))
+    bucket = np.zeros(5, np.int32)
+    local = np.zeros(5, np.int32)
+    pad_a, pad_b = [None] * 5, [None] * 5
+    for b, mem in enumerate(members):
+        for j, aid in enumerate(mem):
+            bucket[aid], local[aid] = b, j
+            A, B = banks[b]
+            pad_a[aid] = jnp.pad(A[j], ((0, 0), (0, 64 - ranks[b])))
+            pad_b[aid] = jnp.pad(B[j], ((0, 64 - ranks[b]), (0, 0)))
+    aid = jax.random.randint(ks[7], (T,), 0, 5)
+    return (x, banks, (jnp.stack(pad_a), jnp.stack(pad_b)), aid,
+            jnp.asarray(bucket), jnp.asarray(local))
+
+
+@pytest.mark.parametrize("block_t", [16, 8, 1])   # 1 == decode (BGMV)
+def test_bucketed_fused_bit_identical_to_host_loop(block_t):
+    x, banks, (Apad, Bpad), aid, bucket, local = _mixed_setup()
+    y_host = sgmv_rank_bucketed(x, banks, aid, bucket, adapter_local=local,
+                                block_t=block_t, interpret=True)
+    y_dev = sgmv_bucketed_fused(x, banks, aid, bucket, local,
+                                block_t=block_t, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_host), np.asarray(y_dev))
+    y_r = sgmv_reference(x, Apad, Bpad, aid)
+    np.testing.assert_allclose(np.asarray(y_dev), np.asarray(y_r),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bucketed_fused_dtypes(dtype):
+    x, banks, _, aid, bucket, local = _mixed_setup()
+    x = x.astype(dtype)
+    banks = [(A.astype(dtype), B.astype(dtype)) for A, B in banks]
+    y_host = sgmv_rank_bucketed(x, banks, aid, bucket, adapter_local=local,
+                                interpret=True)
+    y_dev = sgmv_bucketed_fused(x, banks, aid, bucket, local,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_host), np.asarray(y_dev))
+
+
+def test_bucketed_fused_full_width_banks():
+    """adapter_local=None: every bucket bank indexed by the global id."""
+    key = jax.random.PRNGKey(2)
+    A8 = jax.random.normal(key, (3, 128, 8)) * 0.1
+    B8 = jax.random.normal(key, (3, 8, 256)) * 0.1
+    A64 = jax.random.normal(key, (3, 128, 64)) * 0.1
+    B64 = jax.random.normal(key, (3, 64, 256)) * 0.1
+    bucket = jnp.array([0, 1, 0])
+    x = jax.random.normal(key, (24, 128))
+    aid = jax.random.randint(key, (24,), 0, 3)
+    banks = [(A8, B8), (A64, B64)]
+    y_host = sgmv_rank_bucketed(x, banks, aid, bucket, interpret=True)
+    y_dev = sgmv_bucketed_fused(x, banks, aid, bucket, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_host), np.asarray(y_dev))
+
+
+def test_bucketed_fused_empty_bucket_and_scaling():
+    x, banks, (Apad, Bpad), _, bucket, local = _mixed_setup()
+    aid = jnp.full((x.shape[0],), 1, jnp.int32)    # only the rank-64 one
+    y = sgmv_bucketed_fused(x, banks, aid, bucket, local, scaling=2.0,
+                            interpret=True)
+    y_r = sgmv_reference(x, Apad, Bpad, aid, scaling=2.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), atol=1e-4)
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "pallas" in eqn.primitive.name:
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):                 # closed sub-jaxprs
+                n += _count_pallas_calls(v.jaxpr)
+            elif hasattr(v, "eqns"):
+                n += _count_pallas_calls(v)
+    return n
+
+
+def test_bucketed_fused_single_traced_dispatch():
+    """The whole heterogeneous delta is ONE pallas_call, traceable with
+    an abstract token_adapter (no host sync, no per-bucket host loop)."""
+    x, banks, _, aid, bucket, local = _mixed_setup()
+
+    def f(x, aid):
+        return sgmv_bucketed_fused(x, banks, aid, bucket, local,
+                                   interpret=True)
+
+    jaxpr = jax.make_jaxpr(f)(x, aid)    # aid abstract: device-resident
+    assert _count_pallas_calls(jaxpr.jaxpr) == 1
+    # and the legacy host-loop path is indeed not traceable
+    with pytest.raises(Exception):
+        jax.make_jaxpr(lambda x, a: sgmv_rank_bucketed(
+            x, banks, a, bucket, adapter_local=local, interpret=True)
+        )(x, aid)
+
+
+def test_prepare_segments_bucketed_properties():
+    """dest injective; blocks homogeneous per adapter; bucket-major:
+    occupied blocks are sorted by (bucket, adapter)."""
+    key = jax.random.PRNGKey(11)
+    Na, bt, T = 6, 8, 57
+    aid = jax.random.randint(key, (T,), 0, Na)
+    bucket_of = jnp.asarray([0, 2, 0, 1, 2, 1], jnp.int32)
+    dest, block_adapter = prepare_segments_bucketed(aid, bucket_of, Na, 3,
+                                                    bt)
+    dest, ba = np.asarray(dest), np.asarray(block_adapter)
+    aid_np = np.asarray(aid)
+    assert len(set(dest.tolist())) == T
+    assert dest.max() < padded_len(T, Na, bt)
+    blocks = dest // bt
+    for t in range(T):
+        assert ba[blocks[t]] == aid_np[t]
+    occupied = sorted(set(blocks.tolist()))
+    keys = [(int(bucket_of[ba[b]]), int(ba[b])) for b in occupied]
+    assert keys == sorted(keys)
+
+
+# ---------------------------------------------------------------------------
+# Engine: fused multi-token decode + batched prefill admission
+# ---------------------------------------------------------------------------
+
+ADAPTERS = {"a-r8": 8, "b-r64": 64}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    cfg = get_smoke_config("llama-7b-paper")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_engine(cfg, params, decode_block, bank_mode, rebuild_at=None,
+                prompts=None):
+    from repro.serving import Request, ServingEngine
+    eng = ServingEngine(cfg, params, dict(ADAPTERS), max_batch=4,
+                        max_len=40, bank_mode=bank_mode,
+                        decode_block=decode_block)
+    now = time.monotonic()
+    prompts = prompts or [list(range(1, 8 + i)) for i in range(4)]
+    reqs = [Request(i, ["a-r8", "b-r64"][i % 2], p, 5 + i % 3, arrival=now)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    it = 0
+    while eng.queue or eng.active:
+        eng.step()
+        it += 1
+        if rebuild_at is not None and it == rebuild_at:
+            eng.load_adapters({"c-r16": 16})
+    return [r.output for r in reqs], eng
+
+
+@pytest.mark.parametrize("bank_mode", ["padded", "bucketed"])
+def test_decode_steps_token_identical(setup, bank_mode):
+    cfg, params = setup
+    out1, e1 = _run_engine(cfg, params, 1, bank_mode)
+    out8, e8 = _run_engine(cfg, params, 8, bank_mode)
+    assert out1 == out8
+    assert e1.tokens_decoded == e8.tokens_decoded
+    # the point of the fusion: >= 4x fewer host dispatches per token
+    assert e8.decode_dispatches * 4 <= e1.decode_dispatches
+
+
+@pytest.mark.parametrize("bank_mode", ["padded", "bucketed"])
+def test_decode_steps_survives_bank_rebuild(setup, bank_mode):
+    """A mid-flight load_adapters (bank reshape + slot remap) between
+    fused blocks leaves token streams identical to the k=1 engine."""
+    cfg, params = setup
+    out1, _ = _run_engine(cfg, params, 1, bank_mode, rebuild_at=3)
+    out4, e4 = _run_engine(cfg, params, 4, bank_mode, rebuild_at=1)
+    assert out1 == out4
+    assert e4.bank_rebuilds == 1
+
+
+def test_decode_steps_exhausted_budget_finishes(setup):
+    """Regression: a slot admitted with no decode budget left
+    (max_new_tokens=1 — prefill already produced its token) must still
+    decode-and-finish under decode_block>1 instead of leaking the slot
+    and livelocking run_until_drained."""
+    from repro.serving import Request, ServingEngine
+    cfg, params = setup
+    outs = []
+    for k in (1, 8):
+        eng = ServingEngine(cfg, params, dict(ADAPTERS), max_batch=2,
+                            max_len=40, decode_block=k)
+        req = Request(0, "a-r8", [1, 2, 3], 1, arrival=time.monotonic())
+        eng.submit(req)
+        eng.run_until_drained(max_iters=50)
+        assert eng.active == 0 and not eng.queue
+        outs.append(req.output)
+    assert outs[0] == outs[1]
+
+
+def test_sim_decode_block_amortizes_dispatch_floor():
+    """The simulator mirrors the engine's fused decode: decode_block=k
+    charges ITER_OVERHEAD once per k-token dispatch."""
+    from repro.cluster.costmodel import ServerModel
+    from repro.cluster.server import SimServer
+    from repro.serving.backend import SimBackend
+
+    m = ServerModel()
+    reqs = type("R", (), {"rank": 8, "remote_penalty": 0.0,
+                          "remote_until": 0.0})
+    s1 = SimServer(0, m)
+    s8 = SimServer(0, m, decode_block=8)
+    assert s8._decode_cost([reqs()]) < s1._decode_cost([reqs()])
+    b = SimBackend(2, decode_block=8)
+    assert all(sv.decode_block == 8 for sv in b.servers)
+    b.add_server()
+    assert b.servers[-1].decode_block == 8
+
+
+def test_batched_prefill_admission(setup):
+    """Same-length queued prompts prefill in ONE dispatch; token streams
+    match the solo (one-request) engine."""
+    cfg, params = setup
+    prompts = [[1, 2, 3, 4, 5], [7, 8, 9, 10, 11], [2, 4, 6, 8, 10],
+               [9, 8, 7, 6, 5, 4]]
+    outs, eng = _run_engine(cfg, params, 1, "padded", prompts=prompts)
+    # 4 admitted requests, 2 distinct lengths -> 2 prefill dispatches
+    assert eng.prefill_dispatches == 2
+    solo, _ = _run_engine(cfg, params, 1, "padded", prompts=[prompts[0]])
+    assert outs[0] == solo[0]
+
+
+# ---------------------------------------------------------------------------
+# Cost model mirrors
+# ---------------------------------------------------------------------------
+
+
+def test_costmodel_fused_terms():
+    from repro.cluster.costmodel import ITER_OVERHEAD, make_server
+    s = make_server()
+    # the calibration IS the fused path; legacy dispatchers cost extra
+    assert s.prefill_time(2048, 64, fused=False) > s.prefill_time(2048, 64)
+    assert s.decode_time(32, 64, fused=False) > s.decode_time(32, 64)
+    # host-loop bucketed dispatch pays per-bucket launches
+    two = s.decode_time_bucketed({8: 16, 64: 16}, fused=False)
+    one = s.decode_time_bucketed({64: 32}, fused=False)
+    assert two - s.decode_time_bucketed({8: 16, 64: 16}) > \
+        one - s.decode_time_bucketed({64: 32})
+    # decode_steps(k): dispatch floor amortized over k tokens
+    t1 = s.decode_time(32, 64)
+    t8 = s.decode_time(32, 64, steps=8)
+    assert np.isclose(t1 - t8, ITER_OVERHEAD * (1 - 1 / 8))
+    b8 = s.decode_time_bucketed({8: 16, 64: 16}, steps=8)
+    assert b8 < s.decode_time_bucketed({8: 16, 64: 16})
+
+
+# ---------------------------------------------------------------------------
+# LoRA callback kernel=sgmv path (model-level)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bank_mode", ["padded", "bucketed"])
+def test_lora_cb_sgmv_kernel_matches_einsum(setup, bank_mode):
+    from repro.lora.bank import build_bank
+    from repro.models import model as M
+    cfg, params = setup
+    bank = build_bank(cfg, dict(ADAPTERS), jax.random.PRNGKey(1),
+                      mode=bank_mode, n_layers=cfg.n_layers)
+    toks = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    idx = bank.lora_idx(jnp.asarray([0, 1], jnp.int32))
+    le, ce = M.prefill(cfg, params, toks, bank=bank.data, lora_idx=idx,
+                       cache_len=8)
+    lk, ck = M.prefill(cfg, params, toks, bank=bank.data, lora_idx=idx,
+                       cache_len=8, lora_kernel="sgmv")
+    np.testing.assert_allclose(np.asarray(le), np.asarray(lk), atol=1e-5)
+    nxt = jnp.argmax(le, axis=-1).astype(jnp.int32)
+    l2e, _ = M.decode_step(cfg, params, ce, nxt, bank=bank.data,
+                           lora_idx=idx)
+    l2k, _ = M.decode_step(cfg, params, ck, nxt, bank=bank.data,
+                           lora_idx=idx, lora_kernel="sgmv")
+    np.testing.assert_allclose(np.asarray(l2e), np.asarray(l2k),
+                               atol=1e-5)
