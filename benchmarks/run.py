@@ -12,16 +12,17 @@ import sys
 import time
 
 from . import (bench_ablation, bench_autoscale, bench_interference,
-               bench_kernel, bench_kernels, bench_placement,
-               bench_rank_skew, bench_roofline, bench_scalability,
-               bench_transfer, bench_workloads)
+               bench_kernels, bench_placement, bench_rank_skew,
+               bench_roofline, bench_scalability, bench_transfer,
+               bench_workloads)
 from .common import fmt_rows
 
 BENCHES = {
     "autoscale": bench_autoscale.run,
     "interference": lambda fast: bench_interference.run(),
     "transfer": bench_transfer.run,
-    "kernel": lambda fast: bench_kernel.run(),
+    # "kernel" (the old bench_kernel.py) was folded into "kernels":
+    # its padding-tax / flash-skip rows now come from padding_tax_rows()
     "kernels": bench_kernels.run,
     "placement": bench_placement.run,
     "workloads": bench_workloads.run,

@@ -1,0 +1,109 @@
+"""repro.analysis — static analysis + model checking for the repro tree.
+
+Three passes, one CLI (``python -m repro.analysis``), exit-code gated so
+CI can require it:
+
+* ``linter``   — custom AST lint over ``src/repro`` for JAX tracing
+  hazards (host↔device syncs inside jit/scan regions, Python ``if`` on
+  traced values, ``pl.pallas_call`` sites bypassing
+  ``kernels.default_interpret()``) and Python sharing hazards (mutable
+  default arguments, shared-mutable class attributes / dataclass
+  fields, side-effecting conditional-expression statements).
+* ``vmem``     — static resource analyzer: extracts BlockSpec / scratch
+  / grid shapes from every Pallas kernel entry point and symbolically
+  evaluates worst-case per-core VMEM bytes over the configured
+  (bucket rank, block_t, d_model) space, checked against the v5e
+  roofline constants in ``repro.launch.mesh``.
+* ``protocol`` — an exhaustive-interleaving model checker (BFS, no
+  external deps) driving the REAL ``AdapterStore`` / ``RoutingTable``
+  implementations through fetch / rebalance / drain / retire
+  interleavings and asserting the cluster's safety + liveness
+  invariants (GC never frees an in-flight transfer's source, no route
+  to a retired server, drains terminate, link occupancy consistent,
+  tier residency matches the index).
+
+Suppressions: a ``# analysis: ignore[rule]`` comment on the offending
+line (or the line directly above it) silences that rule there; a bare
+``# analysis: ignore`` silences every rule for the line. Intentional
+hits must carry a one-line reason after the marker.
+
+The whole package is import-light on purpose: no jax, no numpy — it
+must run in a bare CI venv before the heavyweight deps are installed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import re
+from typing import Dict, List, Optional, Set
+
+IGNORE_RE = re.compile(r"#\s*analysis:\s*ignore(?:\[([a-z0-9_,\- ]+)\])?")
+
+ALL_RULES = "*"
+
+
+class Severity(enum.Enum):
+    ERROR = "error"
+    WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analysis result, pointing at a file/line."""
+    path: str
+    line: int
+    rule: str
+    message: str
+    severity: Severity = Severity.ERROR
+    col: int = 0
+
+    def format(self, style: str = "text") -> str:
+        if style == "github":
+            level = ("error" if self.severity is Severity.ERROR
+                     else "warning")
+            return (f"::{level} file={self.path},line={self.line},"
+                    f"col={self.col},title={self.rule}::{self.message}")
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.rule}] {self.message}")
+
+    def as_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule, "severity": self.severity.value,
+                "message": self.message}
+
+
+def suppressions(source: str) -> Dict[int, Set[str]]:
+    """Map line number (1-based) -> set of suppressed rule names (the
+    sentinel ``ALL_RULES`` suppresses everything). A marker on a
+    comment-only line also covers the next line, so long findings can
+    carry their reason above the code they annotate."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = IGNORE_RE.search(text)
+        if not m:
+            continue
+        rules = ({r.strip() for r in m.group(1).split(",")}
+                 if m.group(1) else {ALL_RULES})
+        out.setdefault(i, set()).update(rules)
+        if text.lstrip().startswith("#"):       # standalone marker line
+            out.setdefault(i + 1, set()).update(rules)
+    return out
+
+
+def apply_suppressions(findings: List[Finding],
+                       supp: Dict[int, Set[str]]) -> List[Finding]:
+    kept = []
+    for f in findings:
+        rules = supp.get(f.line, set())
+        if ALL_RULES in rules or f.rule in rules:
+            continue
+        kept.append(f)
+    return kept
+
+
+def format_findings(findings: List[Finding], style: str = "text") -> str:
+    return "\n".join(f.format(style) for f in findings)
+
+
+def has_errors(findings: List[Finding]) -> bool:
+    return any(f.severity is Severity.ERROR for f in findings)

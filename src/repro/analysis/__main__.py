@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.analysis`` — run all three passes, exit
+non-zero on any error-severity finding so CI can gate on it.
+
+    python -m repro.analysis                      # all passes, text
+    python -m repro.analysis --format=github      # CI annotations
+    python -m repro.analysis --passes=lint,vmem   # subset
+    python -m repro.analysis --report=out.json    # findings artifact
+
+Warnings (e.g. the fp32 VMEM headroom probe) are printed but do not
+gate; errors do.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from . import Finding, Severity, format_findings, has_errors
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC_ROOT = os.path.normpath(os.path.join(_HERE, "..", ".."))
+
+
+def run_lint(src_root: str) -> List[Finding]:
+    from . import linter
+    return linter.lint_tree(os.path.join(src_root, "repro"))
+
+
+def run_vmem(src_root: str) -> List[Finding]:
+    from . import vmem
+    return vmem.analyze_kernels(src_root)
+
+
+def run_protocol(src_root: str) -> List[Finding]:
+    from . import protocol
+    pool_py = os.path.join(src_root, "repro", "core", "pool.py")
+    findings: List[Finding] = []
+    for name, res in protocol.small_model_suite():
+        for v in res.violations:
+            findings.append(Finding(
+                pool_py, 1, f"protocol-{v.invariant}",
+                f"[{name}] {v.message}; trace: "
+                f"{' -> '.join(v.trace) or '<initial state>'}"))
+        if res.truncated:
+            findings.append(Finding(
+                pool_py, 1, "protocol-truncated",
+                f"[{name}] state space truncated at "
+                f"{res.states} states — result is bounded, not "
+                f"exhaustive", Severity.WARNING))
+        print(f"protocol[{name}]: {res.states} states / "
+              f"{res.transitions} transitions explored"
+              f"{' (truncated)' if res.truncated else ' (exhaustive)'}, "
+              f"{len(res.violations)} violation(s)", file=sys.stderr)
+    return findings
+
+
+PASSES = {"lint": run_lint, "vmem": run_vmem, "protocol": run_protocol}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--format", choices=("text", "github"),
+                    default="text")
+    ap.add_argument("--passes", default="lint,vmem,protocol",
+                    help="comma-separated subset of: "
+                         + ",".join(PASSES))
+    ap.add_argument("--root", default=_SRC_ROOT,
+                    help="source root containing the repro package")
+    ap.add_argument("--report", default=None,
+                    help="write findings as JSON to this path")
+    args = ap.parse_args(argv)
+
+    findings: List[Finding] = []
+    for name in args.passes.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in PASSES:
+            print(f"unknown pass {name!r} (have: "
+                  f"{', '.join(PASSES)})", file=sys.stderr)
+            return 2
+        findings.extend(PASSES[name](args.root))
+
+    if findings:
+        print(format_findings(findings, args.format))
+    errors = [f for f in findings if f.severity is Severity.ERROR]
+    warnings = [f for f in findings if f.severity is Severity.WARNING]
+    print(f"repro.analysis: {len(errors)} error(s), "
+          f"{len(warnings)} warning(s)", file=sys.stderr)
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump([x.as_dict() for x in findings], f, indent=2)
+    return 1 if has_errors(findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,409 @@
+"""AST linter for JAX tracing hazards and Python sharing hazards.
+
+Rules (ids used in ``# analysis: ignore[rule]`` markers):
+
+* ``host-sync``        — host↔device synchronization inside a traced
+  (jit / scan / pallas-kernel) region or a decode-path host method:
+  ``.item()``, ``np.asarray`` / ``np.array`` / ``jax.device_get`` on
+  device values, ``float()`` / ``int()`` on non-literal arguments.
+* ``host-sync-loop``   — ``int()`` / ``float()`` applied to a
+  *subscripted device array* inside a host-side ``for`` loop
+  (one blocking transfer per element — materialize once with
+  ``np.asarray`` outside the loop instead).
+* ``traced-if``        — Python ``if`` whose condition references a
+  traced (jnp/lax-produced) value inside a traced region; under jit
+  this raises ``TracerBoolConversionError`` at trace time, or silently
+  bakes in one branch when the value is concrete by accident.
+* ``raw-pallas-call``  — a ``pl.pallas_call`` site whose enclosing
+  function never resolves its ``interpret`` mode through
+  ``kernels.default_interpret()`` / ``resolve_interpret()``; such
+  kernels silently interpret on TPU (or compile on CPU CI).
+* ``mutable-default``  — mutable default argument values.
+* ``shared-mutable-class-attr`` — class-level mutable container
+  attribute (shared by every instance).
+* ``shared-mutable-dataclass``  — dataclass field whose default is a
+  shared mutable object (``field(default=<mutable>)``, a module-level
+  name, or a raw mutable literal) — one object crossing every
+  sim/engine boundary instance.
+* ``side-effect-cond`` — statement-position conditional expression
+  (``f(x) if c else None``): side effects hidden inside an expression
+  statement; write the ``if`` out.
+
+The traced-region analysis is heuristic but deliberately so: a
+function is "traced" if it is decorated with ``jax.jit`` (directly or
+via ``functools.partial``), passed to ``jax.jit`` / ``jax.lax.scan`` /
+``jax.lax.while_loop`` / ``jax.lax.cond`` / ``jax.lax.fori_loop`` /
+``pl.pallas_call``, decorated with ``pl.when``, or nested inside a
+traced function. Within a traced function, names assigned from
+``jnp.*`` / ``jax.lax.*`` expressions (or arithmetic on such names) are
+considered traced values.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Set
+
+from . import Finding, Severity, apply_suppressions, suppressions
+
+RULES: Dict[str, str] = {
+    "host-sync": "host<->device sync inside a traced region or decode "
+                 "hot path",
+    "host-sync-loop": "per-element device sync inside a host loop",
+    "traced-if": "Python `if` on a traced value inside a traced region",
+    "raw-pallas-call": "pl.pallas_call bypassing "
+                       "kernels.default_interpret()",
+    "mutable-default": "mutable default argument",
+    "shared-mutable-class-attr": "class-level mutable attribute shared "
+                                 "by all instances",
+    "shared-mutable-dataclass": "dataclass field defaulting to a shared "
+                                "mutable object",
+    "side-effect-cond": "statement-position conditional expression",
+}
+
+_MUTABLE_CALLS = {"list", "dict", "set", "defaultdict", "OrderedDict",
+                  "deque", "Counter"}
+_JIT_ROOTS = {("jax", "jit"), ("jit",)}
+_TRACE_CONSUMERS = {("jax", "jit"), ("jit",),
+                    ("jax", "lax", "scan"), ("lax", "scan"),
+                    ("jax", "lax", "while_loop"), ("lax", "while_loop"),
+                    ("jax", "lax", "cond"), ("lax", "cond"),
+                    ("jax", "lax", "fori_loop"), ("lax", "fori_loop"),
+                    ("jax", "lax", "map"), ("lax", "map"),
+                    ("pl", "pallas_call"), ("pallas_call",),
+                    ("jax", "vmap"), ("jax", "grad"),
+                    ("jax", "value_and_grad")}
+_TRACED_VALUE_ROOTS = ("jnp", "lax")
+_DECODE_PATH_MARKERS = ("decode",)
+
+
+def _dotted(node: ast.AST) -> Optional[tuple]:
+    """`a.b.c` -> ("a","b","c"); plain name -> ("a",); else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _is_partial_jit(call: ast.Call) -> bool:
+    fn = _dotted(call.func)
+    if fn not in {("functools", "partial"), ("partial",)}:
+        return False
+    return any(_dotted(a) in _JIT_ROOTS for a in call.args[:1])
+
+
+def _decorated_traced(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        d = _dotted(dec)
+        if d in _JIT_ROOTS or d in {("pl", "when"), ("when",)}:
+            return True
+        if isinstance(dec, ast.Call):
+            dfn = _dotted(dec.func)
+            if dfn in _JIT_ROOTS or dfn in {("pl", "when"), ("when",)}:
+                return True
+            if _is_partial_jit(dec):
+                return True
+    return False
+
+
+def _is_mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = _dotted(node.func)
+        return bool(fn) and fn[-1] in _MUTABLE_CALLS and not node.args \
+            and not node.keywords or bool(fn) and fn[-1] in _MUTABLE_CALLS
+    return False
+
+
+class _FunctionNames(ast.NodeVisitor):
+    """Collect names of functions handed to trace consumers anywhere in
+    the module (``jax.jit(fn)``, ``jax.lax.scan(body, ...)``,
+    ``pl.pallas_call(kernel, ...)``)."""
+
+    def __init__(self):
+        self.traced_names: Set[str] = set()
+
+    def visit_Call(self, node: ast.Call):
+        fn = _dotted(node.func)
+        if fn in _TRACE_CONSUMERS:
+            for arg in node.args[:1]:
+                target = arg
+                # functools.partial(kernel, ...) as the traced callable
+                if isinstance(arg, ast.Call) and _dotted(arg.func) in {
+                        ("functools", "partial"), ("partial",)}:
+                    target = arg.args[0] if arg.args else arg
+                d = _dotted(target)
+                if d and len(d) == 1:
+                    self.traced_names.add(d[0])
+        self.generic_visit(node)
+
+
+class Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.findings: List[Finding] = []
+        self.tree = ast.parse(source, filename=path)
+        names = _FunctionNames()
+        names.visit(self.tree)
+        self._traced_names = names.traced_names
+        # stack of (function node, traced?, decode_path?, traced_vars,
+        #           loop_depth_at_entry)
+        self._fn_stack: List[dict] = []
+        self._loop_depth = 0
+        self._class_stack: List[ast.ClassDef] = []
+
+    # -- helpers ----------------------------------------------------------
+    def _emit(self, node: ast.AST, rule: str, message: str,
+              severity: Severity = Severity.ERROR):
+        self.findings.append(Finding(
+            self.path, getattr(node, "lineno", 0), rule, message,
+            severity, getattr(node, "col_offset", 0)))
+
+    def _in_traced(self) -> bool:
+        return bool(self._fn_stack) and self._fn_stack[-1]["traced"]
+
+    def _in_decode_path(self) -> bool:
+        return bool(self._fn_stack) and self._fn_stack[-1]["decode"]
+
+    def _traced_vars(self) -> Set[str]:
+        return self._fn_stack[-1]["traced_vars"] if self._fn_stack \
+            else set()
+
+    def _is_traced_expr(self, node: ast.AST) -> bool:
+        """Does the expression (transitively) involve jnp/lax output or
+        a name already known to hold one?"""
+        for sub in ast.walk(node):
+            d = _dotted(sub) if isinstance(
+                sub, (ast.Attribute, ast.Name)) else None
+            if isinstance(sub, ast.Call):
+                f = _dotted(sub.func)
+                if f and f[0] in _TRACED_VALUE_ROOTS:
+                    return True
+                if f and len(f) >= 2 and f[:2] == ("jax", "lax"):
+                    return True
+            if d and len(d) >= 1 and d[0] in self._traced_vars():
+                return True
+        return False
+
+    # -- scope tracking ---------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._class_stack.append(node)
+        self._check_class_body(node)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _visit_function(self, node):
+        traced = (_decorated_traced(node)
+                  or node.name in self._traced_names
+                  or self._in_traced())
+        decode = any(m in node.name.lower()
+                     for m in _DECODE_PATH_MARKERS) and not traced
+        self._check_defaults(node)
+        self._fn_stack.append({"node": node, "traced": traced,
+                               "decode": decode, "traced_vars": set(),
+                               "loops": self._loop_depth})
+        self.generic_visit(node)
+        self._fn_stack.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_For(self, node: ast.For):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_While(self, node: ast.While):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    # -- rules ------------------------------------------------------------
+    def _check_defaults(self, fn):
+        args = fn.args
+        for default in list(args.defaults) + [
+                d for d in args.kw_defaults if d is not None]:
+            if _is_mutable_default(default):
+                self._emit(default, "mutable-default",
+                           f"mutable default argument in "
+                           f"`{fn.name}()` is shared across calls; use "
+                           f"None and create inside")
+
+    def _check_class_body(self, cls: ast.ClassDef):
+        is_dataclass = any(
+            (_dotted(d) or ())[-1:] == ("dataclass",)
+            or (isinstance(d, ast.Call)
+                and (_dotted(d.func) or ())[-1:] == ("dataclass",))
+            for d in cls.decorator_list)
+        for stmt in cls.body:
+            if isinstance(stmt, ast.Assign) and not is_dataclass:
+                if stmt.targets and isinstance(stmt.targets[0], ast.Name) \
+                        and stmt.targets[0].id.startswith("__"):
+                    continue        # __slots__ and friends
+                if _is_mutable_default(stmt.value):
+                    self._emit(stmt, "shared-mutable-class-attr",
+                               f"class attribute on `{cls.name}` holds "
+                               f"a mutable container shared by every "
+                               f"instance; assign it in __init__")
+            if isinstance(stmt, ast.AnnAssign) and is_dataclass \
+                    and stmt.value is not None:
+                self._check_dataclass_field(cls, stmt)
+
+    def _check_dataclass_field(self, cls: ast.ClassDef,
+                               stmt: ast.AnnAssign):
+        val = stmt.value
+        # field(default_factory=...) is the sanctioned form
+        if isinstance(val, ast.Call) and \
+                (_dotted(val.func) or ())[-1:] == ("field",):
+            for kw in val.keywords:
+                if kw.arg == "default" and _is_mutable_default(kw.value):
+                    self._emit(stmt, "shared-mutable-dataclass",
+                               f"dataclass field on `{cls.name}` uses "
+                               f"field(default=<mutable>); every "
+                               f"instance shares one object — use "
+                               f"default_factory")
+            return
+        if _is_mutable_default(val):
+            self._emit(stmt, "shared-mutable-dataclass",
+                       f"dataclass field on `{cls.name}` defaults to a "
+                       f"mutable literal shared by every instance; use "
+                       f"field(default_factory=...)")
+            return
+        # a bare Name as default for a container-annotated field aliases
+        # one module-level object into every instance
+        ann = ast.unparse(stmt.annotation) if stmt.annotation else ""
+        container = any(t in ann for t in
+                        ("List", "Dict", "Set", "list[", "dict[", "set["))
+        if container and isinstance(val, ast.Name):
+            self._emit(stmt, "shared-mutable-dataclass",
+                       f"dataclass field on `{cls.name}` defaults to "
+                       f"module-level `{val.id}`; every instance shares "
+                       f"that object — use field(default_factory=...)")
+
+    def visit_Assign(self, node: ast.Assign):
+        if self._fn_stack:
+            # np.asarray / device_get is the sanctioned sync point: its
+            # result is a host array, not a traced value
+            materialized = isinstance(node.value, ast.Call) and \
+                _dotted(node.value.func) in {
+                    ("np", "asarray"), ("np", "array"),
+                    ("numpy", "asarray"), ("numpy", "array"),
+                    ("jax", "device_get")}
+            for tgt in node.targets:
+                d = _dotted(tgt)
+                if d and len(d) == 1:
+                    if materialized:
+                        self._traced_vars().discard(d[0])
+                    elif self._is_traced_expr(node.value):
+                        self._traced_vars().add(d[0])
+        self.generic_visit(node)
+
+    def visit_If(self, node: ast.If):
+        if self._in_traced() and self._is_traced_expr(node.test):
+            self._emit(node, "traced-if",
+                       "Python `if` on a traced value inside a traced "
+                       "region: use jnp.where / lax.cond / pl.when")
+        self.generic_visit(node)
+
+    def visit_Expr(self, node: ast.Expr):
+        if isinstance(node.value, ast.IfExp):
+            self._emit(node, "side-effect-cond",
+                       "statement-position conditional expression hides "
+                       "a side effect; write the `if` statement out")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        fn = _dotted(node.func)
+        in_traced = self._in_traced()
+        hot = in_traced or self._in_decode_path()
+
+        # .item() on anything, in any hot region
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and hot:
+            self._emit(node, "host-sync",
+                       ".item() forces a blocking device->host transfer")
+
+        # np.asarray / np.array / jax.device_get in hot regions
+        if fn in {("np", "asarray"), ("np", "array"),
+                  ("numpy", "asarray"), ("numpy", "array"),
+                  ("jax", "device_get")} and hot:
+            where = ("a traced region" if in_traced
+                     else "the decode host path")
+            self._emit(node, "host-sync",
+                       f"{'.'.join(fn)} inside {where} synchronizes the "
+                       f"device stream")
+
+        # float()/int() on non-literal args
+        if fn in {("float",), ("int",), ("bool",)} and node.args:
+            arg = node.args[0]
+            literal = isinstance(arg, ast.Constant) or \
+                isinstance(arg, (ast.Num, ast.Str))
+            if in_traced and not literal:
+                self._emit(node, "host-sync",
+                           f"{fn[0]}() on a traced value raises (or "
+                           f"syncs) under jit; use .astype / "
+                           f"lax.convert_element_type")
+            elif not in_traced and self._loop_depth > \
+                    (self._fn_stack[-1]["loops"] if self._fn_stack
+                     else 0) and isinstance(arg, ast.Subscript):
+                base = _dotted(arg.value)
+                if base and base[-1] in self._traced_vars():
+                    self._emit(node, "host-sync-loop",
+                               f"{fn[0]}({ast.unparse(arg)}) inside a "
+                               f"host loop issues one blocking transfer "
+                               f"per element; np.asarray the array once "
+                               f"before the loop")
+
+        # raw pallas_call without interpret resolution in the same fn
+        if fn in {("pl", "pallas_call"), ("pallas_call",)}:
+            if not self._enclosing_resolves_interpret():
+                self._emit(node, "raw-pallas-call",
+                           "pl.pallas_call without resolving interpret "
+                           "through kernels.default_interpret(); TPU "
+                           "runs may silently interpret (or CPU CI "
+                           "silently compile)")
+        self.generic_visit(node)
+
+    def _enclosing_resolves_interpret(self) -> bool:
+        if not self._fn_stack:
+            return False
+        for frame in reversed(self._fn_stack):
+            for sub in ast.walk(frame["node"]):
+                if isinstance(sub, ast.Call):
+                    f = _dotted(sub.func)
+                    if f and f[-1] in ("resolve_interpret",
+                                       "default_interpret"):
+                        return True
+        return False
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    linter = Linter(path, source)
+    linter.visit(linter.tree)
+    return apply_suppressions(linter.findings, suppressions(source))
+
+
+def lint_file(path: str) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def lint_tree(root: str) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (skipping this package: the
+    analyzers legitimately name the hazards they search for)."""
+    findings: List[Finding] = []
+    skip = os.path.join("repro", "analysis")
+    for dirpath, _dirnames, filenames in sorted(os.walk(root)):
+        if skip in dirpath:
+            continue
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                findings.extend(lint_file(os.path.join(dirpath, name)))
+    return findings

@@ -1,0 +1,754 @@
+"""Static Pallas VMEM / BlockSpec analyzer.
+
+Extracts BlockSpec, scratch and grid shapes from every ``pl.pallas_call``
+entry point in ``kernels/sgmv.py`` and ``kernels/flash.py`` by
+symbolically executing the wrapper function bodies with array *stubs*
+(shape + itemsize, no jax, no numpy), then evaluates worst-case per-core
+VMEM bytes over the configured parameter space and checks them against
+the v5e roofline constants in ``launch/mesh.py`` (read from its AST so
+this module never imports jax).
+
+The checked envelope:
+
+* **production** — bf16 operands, the max ``d_model`` / LoRA rank set /
+  head dim over every registered model config, ``block_t`` drawn from
+  the defaults of the ``kernels/ops.py`` dispatch wrappers (that file's
+  contribution: its wrappers are the only callers, so their defaults
+  define the reachable block shapes). Violations are **errors**.
+* **fp32 headroom probe** — the same shapes at fp32. fp32 runs in this
+  repo are CPU interpret-mode (no VMEM constraint exists there), so a
+  bust is reported as a **warning**: it documents that the kernel only
+  fits the TPU budget in bf16.
+
+Cost model: the Pallas TPU pipeline double-buffers every input and
+output block, scratch is single-buffered —
+
+    VMEM ≈ 2·Σ bytes(in blocks) + 2·bytes(out block) + Σ bytes(scratch)
+
+Alignment checks: a block's last dim must be a multiple of the 128-wide
+lane (or cover the whole operand dim); the second-to-last must be a
+multiple of the 8-deep sublane (or be 1, or cover the operand dim).
+Grid checks: every grid dim is a positive int and every block dim
+divides its operand dim.
+
+Rules: ``vmem-budget`` (error) / ``vmem-headroom`` (warning),
+``vmem-align``, ``vmem-grid``, ``vmem-parse``, ``vmem-unregistered``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from . import Finding, Severity
+
+# --------------------------------------------------------------------------
+# Value model for the mini symbolic interpreter
+# --------------------------------------------------------------------------
+
+
+class Opaque:
+    """Unknown value (lambdas, jit machinery, interpret flags)."""
+
+    def __repr__(self):
+        return "<opaque>"
+
+
+OPAQUE = Opaque()
+
+
+class Arr:
+    """Array stub: shape + itemsize, nothing else."""
+
+    def __init__(self, shape: Tuple[int, ...], itemsize: int):
+        self.shape = tuple(int(s) for s in shape)
+        self.itemsize = int(itemsize)
+
+    def __repr__(self):
+        return f"Arr{self.shape}x{self.itemsize}B"
+
+
+class Dtype:
+    def __init__(self, itemsize: int):
+        self.itemsize = itemsize
+
+
+class Block:
+    """pl.BlockSpec stand-in (index_map is deliberately ignored)."""
+
+    def __init__(self, shape: Tuple[int, ...]):
+        self.shape = tuple(int(s) for s in shape)
+
+
+class Scratch:
+    """pltpu.VMEM scratch allocation."""
+
+    def __init__(self, shape: Tuple[int, ...], itemsize: int):
+        self.shape = tuple(int(s) for s in shape)
+        self.itemsize = int(itemsize)
+
+    def bytes(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n * self.itemsize
+
+
+class KernelCall:
+    """One captured pl.pallas_call site."""
+
+    def __init__(self, fn_name: str, line: int):
+        self.fn_name = fn_name
+        self.line = line
+        self.grid: Tuple[int, ...] = ()
+        self.num_scalar_prefetch = 0
+        self.in_specs: List[Block] = []
+        self.out_specs: Optional[Block] = None
+        self.scratch: List[Scratch] = []
+        self.out_shape: Optional[Arr] = None
+        self.operands: List[object] = []
+
+    def vmem_bytes(self) -> int:
+        """2x every in/out block (double-buffered pipeline) + scratch."""
+        total = 0
+        ops = [o for o in self.operands if isinstance(o, Arr)]
+        # operands after the scalar-prefetch args align with in_specs
+        data_ops = ops[self.num_scalar_prefetch:]
+        for i, spec in enumerate(self.in_specs):
+            itemsize = (data_ops[i].itemsize if i < len(data_ops) else 4)
+            n = 1
+            for s in spec.shape:
+                n *= s
+            total += 2 * n * itemsize
+        if self.out_specs is not None and self.out_shape is not None:
+            n = 1
+            for s in self.out_specs.shape:
+                n *= s
+            total += 2 * n * self.out_shape.itemsize
+        total += sum(s.bytes() for s in self.scratch)
+        return total
+
+
+_DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "float64": 8, "int64": 8, "bool_": 1,
+}
+
+
+def _dotted(node: ast.AST) -> Optional[tuple]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+class _Halt(Exception):
+    """Raised on a construct the interpreter can't model."""
+
+
+class Evaluator:
+    """Executes one wrapper-function body over stub values, recording
+    every ``pl.pallas_call`` (spec shapes, grid, scratch, operands)."""
+
+    def __init__(self, fn: ast.FunctionDef, env: Dict[str, object],
+                 path: str):
+        self.fn = fn
+        self.path = path
+        self.env = dict(env)
+        self.calls: List[KernelCall] = []
+        # seed keyword-only defaults not overridden by the env
+        kw = fn.args.kwonlyargs
+        for arg, default in zip(kw, fn.args.kw_defaults):
+            if arg.arg not in self.env and default is not None:
+                try:
+                    self.env[arg.arg] = self.eval(default)
+                except _Halt:
+                    self.env[arg.arg] = OPAQUE
+
+    # -- statements --------------------------------------------------------
+    def run(self):
+        for stmt in self.fn.body:
+            self.exec_stmt(stmt)
+        return self.calls
+
+    def exec_stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, ast.Assign):
+            val = self.eval(stmt.value)
+            for tgt in stmt.targets:
+                self.bind(tgt, val)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.bind(stmt.target, self.eval(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            self.env[getattr(stmt.target, "id", "_")] = OPAQUE
+        elif isinstance(stmt, ast.Expr):
+            self.eval(stmt.value)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self.eval(stmt.value)
+        elif isinstance(stmt, ast.For):
+            self.exec_for(stmt)
+        elif isinstance(stmt, ast.If):
+            test = self.eval(stmt.test)
+            body = stmt.body if (not isinstance(test, Opaque) and test) \
+                else stmt.orelse
+            for s in body:
+                self.exec_stmt(s)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Pass, ast.Assert)):
+            pass
+        else:
+            raise _Halt(f"unsupported statement {type(stmt).__name__} "
+                        f"at line {stmt.lineno}")
+
+    def exec_for(self, stmt: ast.For):
+        items = self.eval(stmt.iter)
+        if isinstance(items, Opaque):
+            raise _Halt(f"opaque loop iterable at line {stmt.lineno}")
+        for item in items:
+            self.bind(stmt.target, item)
+            for s in stmt.body:
+                self.exec_stmt(s)
+
+    def bind(self, target: ast.AST, value):
+        if isinstance(target, ast.Name):
+            self.env[target.id] = value
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            if isinstance(value, Opaque) or not hasattr(value, "__iter__"):
+                for elt in target.elts:
+                    self.bind(elt, OPAQUE)
+            else:
+                seq = list(value)
+                for elt, v in zip(target.elts, seq):
+                    self.bind(elt, v)
+        # attribute/subscript targets: ignored (not used by wrappers)
+
+    # -- expressions -------------------------------------------------------
+    def eval(self, node: ast.AST):
+        if isinstance(node, ast.Constant):
+            return node.value
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, OPAQUE)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return [self.eval(e) for e in node.elts] \
+                if isinstance(node, ast.List) \
+                else tuple(self.eval(e) for e in node.elts)
+        if isinstance(node, ast.Attribute):
+            return self.eval_attribute(node)
+        if isinstance(node, ast.BinOp):
+            return self.eval_binop(node)
+        if isinstance(node, ast.UnaryOp):
+            v = self.eval(node.operand)
+            if isinstance(v, Opaque):
+                return OPAQUE
+            if isinstance(node.op, ast.USub):
+                return -v
+            if isinstance(node.op, ast.Not):
+                return not v
+            return OPAQUE
+        if isinstance(node, ast.Compare):
+            left = self.eval(node.left)
+            right = self.eval(node.comparators[0])
+            if isinstance(left, Opaque) or isinstance(right, Opaque):
+                return OPAQUE
+            op = node.ops[0]
+            try:
+                if isinstance(op, ast.Eq):
+                    return left == right
+                if isinstance(op, ast.NotEq):
+                    return left != right
+                if isinstance(op, ast.Lt):
+                    return left < right
+                if isinstance(op, ast.LtE):
+                    return left <= right
+                if isinstance(op, ast.Gt):
+                    return left > right
+                if isinstance(op, ast.GtE):
+                    return left >= right
+                if isinstance(op, ast.Is):
+                    return left is right
+                if isinstance(op, ast.IsNot):
+                    return left is not right
+            except TypeError:
+                return OPAQUE
+            return OPAQUE
+        if isinstance(node, ast.BoolOp):
+            vals = [self.eval(v) for v in node.values]
+            if any(isinstance(v, Opaque) for v in vals):
+                return OPAQUE
+            if isinstance(node.op, ast.And):
+                return all(vals)
+            return any(vals)
+        if isinstance(node, ast.IfExp):
+            test = self.eval(node.test)
+            if isinstance(test, Opaque):
+                return OPAQUE
+            return self.eval(node.body if test else node.orelse)
+        if isinstance(node, ast.Subscript):
+            return self.eval_subscript(node)
+        if isinstance(node, ast.Call):
+            return self.eval_call(node)
+        if isinstance(node, ast.Lambda):
+            return OPAQUE
+        if isinstance(node, ast.GeneratorExp):
+            return self.eval_generator(node)
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value)
+        if isinstance(node, ast.JoinedStr):
+            return OPAQUE
+        raise _Halt(f"unsupported expression {type(node).__name__} "
+                    f"at line {getattr(node, 'lineno', 0)}")
+
+    def eval_attribute(self, node: ast.Attribute):
+        base = self.eval(node.value)
+        if isinstance(base, Arr):
+            if node.attr == "shape":
+                return base.shape
+            if node.attr == "dtype":
+                return Dtype(base.itemsize)
+            return OPAQUE
+        d = _dotted(node)
+        if d and d[0] in ("jnp", "np", "numpy") and d[-1] in _DTYPE_BYTES:
+            return Dtype(_DTYPE_BYTES[d[-1]])
+        if isinstance(base, list) and node.attr in ("append", "extend"):
+            return ("__listmethod__", base, node.attr)
+        return d or OPAQUE           # dotted path marker for eval_call
+
+    def eval_binop(self, node: ast.BinOp):
+        left, right = self.eval(node.left), self.eval(node.right)
+        if isinstance(left, Opaque) or isinstance(right, Opaque):
+            return OPAQUE
+        op = node.op
+        try:
+            if isinstance(op, ast.Add):
+                return left + right
+            if isinstance(op, ast.Sub):
+                return left - right
+            if isinstance(op, ast.Mult):
+                return left * right
+            if isinstance(op, ast.FloorDiv):
+                return left // right
+            if isinstance(op, ast.Div):
+                return left / right
+            if isinstance(op, ast.Mod):
+                return left % right
+            if isinstance(op, ast.Pow):
+                return left ** right
+            if isinstance(op, ast.BitAnd):
+                return left & right
+        except TypeError:
+            return OPAQUE
+        return OPAQUE
+
+    def eval_subscript(self, node: ast.Subscript):
+        base = self.eval(node.value)
+        if isinstance(base, Opaque):
+            return OPAQUE
+        if isinstance(base, Arr):
+            return OPAQUE            # slicing an array stub: unmodelled
+        idx = node.slice
+        if isinstance(idx, ast.Slice):
+            return OPAQUE
+        i = self.eval(idx)
+        if isinstance(i, Opaque) or not isinstance(i, int):
+            return OPAQUE
+        try:
+            return base[i]
+        except (IndexError, KeyError, TypeError):
+            return OPAQUE
+
+    def eval_generator(self, node: ast.GeneratorExp):
+        gen = node.generators[0]
+        items = self.eval(gen.iter)
+        if isinstance(items, Opaque):
+            raise _Halt("opaque generator iterable")
+        out = []
+        for item in items:
+            self.bind(gen.target, item)
+            if all(self.eval(c) for c in gen.ifs):
+                out.append(self.eval(node.elt))
+        return tuple(out)
+
+    def eval_call(self, node: ast.Call):
+        fn = self.eval(node.func)
+        args = []
+        for a in node.args:
+            v = self.eval(a)
+            if isinstance(a, ast.Starred):
+                args.extend(list(v) if not isinstance(v, Opaque)
+                            else [OPAQUE])
+            else:
+                args.append(v)
+        kwargs = {kw.arg: self.eval(kw.value) for kw in node.keywords
+                  if kw.arg is not None}
+
+        if isinstance(fn, tuple) and fn and fn[0] == "__listmethod__":
+            _, lst, meth = fn
+            if meth == "append":
+                lst.append(args[0])
+            else:
+                lst.extend(list(args[0]))
+            return None
+
+        name = fn if isinstance(fn, tuple) else None
+        if isinstance(node.func, ast.Name):
+            name = (node.func.id,)
+
+        if name:
+            builtin = {
+                ("min",): min, ("max",): max, ("len",): len,
+                ("abs",): abs, ("sum",): sum, ("int",): int,
+                ("tuple",): tuple, ("list",): list, ("range",): range,
+            }.get(name)
+            if builtin is not None:
+                if any(isinstance(a, Opaque) for a in args):
+                    return OPAQUE
+                try:
+                    out = builtin(*args)
+                    return list(out) if builtin is range else out
+                except (TypeError, ValueError):
+                    return OPAQUE
+            if name == ("enumerate",):
+                seq = args[0]
+                if isinstance(seq, Opaque):
+                    return OPAQUE
+                return [(i, v) for i, v in enumerate(seq)]
+            last = name[-1]
+            if last == "BlockSpec":
+                shape = kwargs.get("block_shape", args[0] if args else ())
+                if isinstance(shape, Opaque) or \
+                        any(isinstance(s, Opaque) for s in shape):
+                    raise _Halt(f"unresolvable BlockSpec shape at line "
+                                f"{node.lineno}")
+                return Block(shape)
+            if last == "VMEM":
+                shape, dt = args[0], args[1]
+                itemsize = dt.itemsize if isinstance(dt, Dtype) else 4
+                if any(isinstance(s, Opaque) for s in shape):
+                    raise _Halt(f"unresolvable scratch shape at line "
+                                f"{node.lineno}")
+                return Scratch(shape, itemsize)
+            if last == "ShapeDtypeStruct":
+                shape, dt = args[0], args[1]
+                itemsize = dt.itemsize if isinstance(dt, Dtype) else 4
+                if any(isinstance(s, Opaque) for s in shape):
+                    raise _Halt(f"unresolvable out_shape at line "
+                                f"{node.lineno}")
+                return Arr(shape, itemsize)
+            if last == "PrefetchScalarGridSpec":
+                return ("__gridspec__", kwargs)
+            if last == "pad" and name[0] in ("jnp", "np", "numpy"):
+                arr, pads = args[0], args[1]
+                if not isinstance(arr, Arr) or isinstance(pads, Opaque):
+                    return OPAQUE
+                shape = tuple(s + lo + hi
+                              for s, (lo, hi) in zip(arr.shape, pads))
+                return Arr(shape, arr.itemsize)
+            if last == "pallas_call":
+                return self.capture_call(node, args, kwargs)
+
+        if isinstance(fn, KernelCall):
+            fn.operands = args
+            self.calls.append(fn)
+            return fn.out_shape if fn.out_shape is not None else OPAQUE
+        return OPAQUE
+
+    def capture_call(self, node: ast.Call, args, kwargs) -> KernelCall:
+        call = KernelCall(self.fn.name, node.lineno)
+        spec = kwargs.get("grid_spec")
+        fields = dict(kwargs)
+        if isinstance(spec, tuple) and spec and spec[0] == "__gridspec__":
+            fields.update(spec[1])
+        grid = fields.get("grid", ())
+        if isinstance(grid, int):
+            grid = (grid,)
+        if isinstance(grid, Opaque) or \
+                any(isinstance(g, Opaque) for g in grid):
+            raise _Halt(f"unresolvable grid at line {node.lineno}")
+        call.grid = tuple(grid)
+        nsp = fields.get("num_scalar_prefetch", 0)
+        call.num_scalar_prefetch = nsp if isinstance(nsp, int) else 0
+        in_specs = fields.get("in_specs", [])
+        if isinstance(in_specs, Opaque):
+            raise _Halt(f"unresolvable in_specs at line {node.lineno}")
+        call.in_specs = [s for s in in_specs if isinstance(s, Block)]
+        out = fields.get("out_specs")
+        call.out_specs = out if isinstance(out, Block) else None
+        scratch = fields.get("scratch_shapes", [])
+        if not isinstance(scratch, Opaque):
+            call.scratch = [s for s in scratch if isinstance(s, Scratch)]
+        osh = fields.get("out_shape")
+        call.out_shape = osh if isinstance(osh, Arr) else None
+        return call
+
+
+# --------------------------------------------------------------------------
+# Worst-case parameter spaces (from repro.configs + ops.py defaults)
+# --------------------------------------------------------------------------
+
+_SRC_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def _mesh_constants(src_root: str = _SRC_ROOT) -> Dict[str, float]:
+    """Read launch/mesh.py's module-level numeric constants from its AST
+    (it imports jax at top level; this package must not)."""
+    path = os.path.join(src_root, "repro", "launch", "mesh.py")
+    out: Dict[str, float] = {}
+    with open(path, "r", encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            try:
+                val = ast.literal_eval(stmt.value)
+            except ValueError:
+                try:
+                    val = eval(compile(ast.Expression(stmt.value),
+                                       "<mesh>", "eval"), {}, {})
+                except Exception:
+                    continue
+            if isinstance(val, (int, float)):
+                out[stmt.targets[0].id] = val
+    return out
+
+
+def vmem_budget(src_root: str = _SRC_ROOT) -> int:
+    consts = _mesh_constants(src_root)
+    return int(consts.get("VMEM_BYTES_PER_CORE", 16 * 2**20))
+
+
+def _config_space() -> Dict[str, object]:
+    """Worst-case model dims over every registered config (import-light:
+    repro.configs has no jax dependency)."""
+    from repro.configs import ARCH_IDS, get_config
+    d = 0
+    hd = 0
+    ranks: set = set()
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        dims = [cfg.d_model]
+        if cfg.n_heads:
+            dims.append(cfg.n_heads * cfg.resolved_head_dim)
+            dims.append(2 * cfg.n_kv_heads * cfg.resolved_head_dim)
+        d = max(d, max(dims))
+        hd = max(hd, cfg.resolved_head_dim)
+        ranks.update(cfg.lora.ranks)
+        ranks.add(cfg.lora.max_rank)
+    return {"d": d, "head_dim": hd, "ranks": tuple(sorted(ranks))}
+
+
+def _ops_block_ts(src_root: str = _SRC_ROOT) -> Tuple[int, ...]:
+    """block_t values reachable through the kernels/ops.py dispatch
+    wrappers: the union of their declared defaults and literal call-site
+    overrides (bgmv's block_t=1)."""
+    path = os.path.join(src_root, "repro", "kernels", "ops.py")
+    vals = set()
+    with open(path, "r", encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            for arg, default in zip(node.args.kwonlyargs,
+                                    node.args.kw_defaults):
+                if arg.arg == "block_t" and \
+                        isinstance(default, ast.Constant):
+                    vals.add(int(default.value))
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "block_t" and \
+                        isinstance(kw.value, ast.Constant):
+                    vals.add(int(kw.value.value))
+    return tuple(sorted(vals)) or (1, 16)
+
+
+def kernel_envs(src_root: str = _SRC_ROOT,
+                itemsize: int = 2) -> Dict[str, List[Dict[str, object]]]:
+    """Per-entry-point worst-case environments: every (block_t, max-d,
+    max-rank) corner reachable through the ops.py wrappers, at the given
+    operand itemsize."""
+    space = _config_space()
+    d = space["d"]
+    ranks = space["ranks"]
+    r = max(ranks)
+    hd = space["head_dim"]
+    na = 8
+    envs: Dict[str, List[Dict[str, object]]] = {
+        "sgmv_shrink": [], "sgmv_expand": [], "sgmv_fused_blocks": [],
+        "sgmv_multibank_blocks": [], "flash_mha": [],
+    }
+    for bt in _ops_block_ts(src_root):
+        t_pad = bt * 8
+        nblocks = t_pad // bt
+        envs["sgmv_shrink"].append({
+            "x_pad": Arr((t_pad, d), itemsize),
+            "A": Arr((na, d, r), itemsize),
+            "block_adapter": Arr((nblocks,), 4), "block_t": bt})
+        envs["sgmv_expand"].append({
+            "h_pad": Arr((t_pad, r), itemsize),
+            "B": Arr((na, r, d), itemsize),
+            "block_adapter": Arr((nblocks,), 4), "block_t": bt})
+        envs["sgmv_fused_blocks"].append({
+            "x_pad": Arr((t_pad, d), itemsize),
+            "A": Arr((na, d, r), itemsize),
+            "B": Arr((na, r, d), itemsize),
+            "block_adapter": Arr((nblocks,), 4), "block_t": bt})
+        envs["sgmv_multibank_blocks"].append({
+            "x_pad": Arr((t_pad, d), itemsize),
+            "banks": tuple((Arr((na, d, rb), itemsize),
+                            Arr((na, rb, d), itemsize)) for rb in ranks),
+            "block_bucket": Arr((nblocks,), 4),
+            "block_row": Arr((nblocks,), 4), "block_t": bt})
+    seq = 4096
+    envs["flash_mha"].append({
+        "q": Arr((1, 2, seq, hd), itemsize),
+        "k": Arr((1, 2, seq, hd), itemsize),
+        "v": Arr((1, 2, seq, hd), itemsize)})
+    return envs
+
+
+# --------------------------------------------------------------------------
+# Checks
+# --------------------------------------------------------------------------
+
+LANE = 128
+SUBLANE = 8
+
+
+def _check_block(path: str, call: KernelCall, block: Block,
+                 operand: Optional[Arr], what: str) -> List[Finding]:
+    out: List[Finding] = []
+    shape = block.shape
+    oshape = operand.shape if operand is not None else None
+    if shape and isinstance(shape[-1], int):
+        full = oshape is not None and shape[-1] == oshape[-1]
+        if shape[-1] % LANE != 0 and not full:
+            out.append(Finding(
+                path, call.line, "vmem-align",
+                f"{call.fn_name}: {what} block last dim {shape[-1]} is "
+                f"neither a multiple of the {LANE}-wide lane nor the "
+                f"full operand dim"))
+    if len(shape) >= 2 and isinstance(shape[-2], int):
+        full = oshape is not None and len(oshape) >= 2 \
+            and shape[-2] == oshape[-2]
+        if shape[-2] % SUBLANE != 0 and shape[-2] != 1 and not full:
+            out.append(Finding(
+                path, call.line, "vmem-align",
+                f"{call.fn_name}: {what} block dim {shape[-2]} is not a "
+                f"multiple of the {SUBLANE}-deep sublane (nor 1)"))
+    if oshape is not None and len(oshape) == len(shape):
+        for bdim, odim in zip(shape, oshape):
+            if isinstance(bdim, int) and isinstance(odim, int) \
+                    and bdim > 0 and odim % bdim != 0:
+                out.append(Finding(
+                    path, call.line, "vmem-grid",
+                    f"{call.fn_name}: {what} block dim {bdim} does not "
+                    f"divide operand dim {odim}"))
+    return out
+
+
+def check_call(path: str, call: KernelCall, budget: int,
+               env_label: str = "",
+               severity: Severity = Severity.ERROR) -> List[Finding]:
+    findings: List[Finding] = []
+    for g in call.grid:
+        if not (isinstance(g, int) and g >= 1):
+            findings.append(Finding(
+                path, call.line, "vmem-grid",
+                f"{call.fn_name}: grid dim {g!r} is not a positive int"))
+    data_ops = [o for o in call.operands if isinstance(o, Arr)]
+    data_ops = data_ops[call.num_scalar_prefetch:]
+    for i, spec in enumerate(call.in_specs):
+        operand = data_ops[i] if i < len(data_ops) else None
+        findings.extend(_check_block(path, call, spec, operand,
+                                     f"in_specs[{i}]"))
+    if call.out_specs is not None:
+        findings.extend(_check_block(path, call, call.out_specs,
+                                     call.out_shape, "out"))
+    used = call.vmem_bytes()
+    if used > budget:
+        rule = ("vmem-budget" if severity is Severity.ERROR
+                else "vmem-headroom")
+        findings.append(Finding(
+            path, call.line, rule,
+            f"{call.fn_name}: worst-case VMEM {used / 2**20:.1f} MiB "
+            f"exceeds the {budget / 2**20:.0f} MiB/core budget"
+            f"{' (' + env_label + ')' if env_label else ''}",
+            severity))
+    return findings
+
+
+def analyze_source(source: str, path: str,
+                   envs_by_fn: Dict[str, List[Dict[str, object]]],
+                   budget: int,
+                   severity: Severity = Severity.ERROR,
+                   env_label: str = "",
+                   require_registered: bool = True) -> List[Finding]:
+    """Symbolically execute each pallas_call-bearing function in
+    ``source`` under every registered worst-case env and check it."""
+    findings: List[Finding] = []
+    tree = ast.parse(source, filename=path)
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        has_pc = any(
+            isinstance(sub, ast.Call)
+            and (_dotted(sub.func) or ())[-1:] == ("pallas_call",)
+            for sub in ast.walk(node))
+        if not has_pc:
+            continue
+        envs = envs_by_fn.get(node.name)
+        if not envs:
+            if require_registered:
+                findings.append(Finding(
+                    path, node.lineno, "vmem-unregistered",
+                    f"kernel entry point `{node.name}` has no registered "
+                    f"worst-case parameter space", Severity.WARNING))
+            continue
+        for env in envs:
+            try:
+                ev = Evaluator(node, env, path)
+                calls = ev.run()
+            except _Halt as e:
+                findings.append(Finding(
+                    path, node.lineno, "vmem-parse",
+                    f"could not symbolically evaluate `{node.name}`: "
+                    f"{e}"))
+                break
+            if not calls:
+                findings.append(Finding(
+                    path, node.lineno, "vmem-parse",
+                    f"`{node.name}` contains a pallas_call the evaluator "
+                    f"never reached"))
+                break
+            for call in calls:
+                findings.extend(check_call(path, call, budget,
+                                           env_label, severity))
+    return findings
+
+
+KERNEL_FILES = ("sgmv.py", "flash.py")
+
+
+def analyze_kernels(src_root: str = _SRC_ROOT) -> List[Finding]:
+    """The full pass: production (bf16) envelope as errors, the fp32
+    headroom probe as warnings."""
+    budget = vmem_budget(src_root)
+    findings: List[Finding] = []
+    probes = [
+        (kernel_envs(src_root, itemsize=2), Severity.ERROR, "bf16"),
+        (kernel_envs(src_root, itemsize=4), Severity.WARNING,
+         "fp32 headroom probe"),
+    ]
+    for name in KERNEL_FILES:
+        path = os.path.join(src_root, "repro", "kernels", name)
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+        for envs, sev, label in probes:
+            findings.extend(analyze_source(
+                source, path, envs, budget, severity=sev, env_label=label,
+                require_registered=(sev is Severity.ERROR)))
+    return findings

@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Set
 
 from repro.core.baselines import POLICIES
 from repro.core.demand import DemandEstimator
-from repro.core.pool import AdapterStore
+from repro.core.pool import AdapterStore, runtime_checks_enabled
 from repro.core.routing import RoutingTable
 from repro.core.types import AdapterInfo, PlacementContext
 
@@ -311,12 +311,26 @@ class ClusterSimulator:
 
         now = 0.0
         last_activity = 0.0
+        # REPRO_CHECK_INVARIANTS=1: re-check the protocol checker's
+        # store+routing invariants on a stride of events (debug-only;
+        # the env gate keeps the hot loop free of the sweep otherwise).
+        # The store already self-checks on every poll/start_fetch edge,
+        # so the stride only paces the routing-table cross-check — a
+        # full sweep per event is O(adapters x servers) and makes the
+        # large sims unusably slow.
+        debug_invariants = runtime_checks_enabled()
+        debug_stride = 64
+        n_events = 0
         while heap:
             now, _, kind, payload = heapq.heappop(heap)
             if kind == "provision" and not work_remains():
                 continue    # run drained while the server booted:
                 #             nothing to serve, nothing to bill
             last_activity = now
+            n_events += 1
+            if debug_invariants and n_events % debug_stride == 0:
+                pool.check_invariants(now, routing=router,
+                                      raise_on_violation=True)
             if kind == "arrival":
                 req: SimRequest = payload
                 remaining_arrivals -= 1
@@ -367,7 +381,8 @@ class ClusterSimulator:
                     if end > now or s.waiting or s.running:
                         push(end, "server", s.sid)
                 else:
-                    schedule_server(s, now + 1e-9) if s.waiting else None
+                    if s.waiting:
+                        schedule_server(s, now + 1e-9)
             elif kind == "rebalance":
                 rebalances += 1
                 do_rebalance(now)

@@ -38,9 +38,20 @@ that transfer lands.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Set, Tuple
 
 from .types import AdapterInfo, Placement
+
+# opt-in runtime validation: with REPRO_CHECK_INVARIANTS=1 the store
+# re-checks the model checker's invariants (repro.analysis.protocol)
+# after every poll/fetch, so sim runs validate what the checker proves
+# exhaustively on small models
+CHECK_INVARIANTS_ENV = "REPRO_CHECK_INVARIANTS"
+
+
+def runtime_checks_enabled() -> bool:
+    return os.environ.get(CHECK_INVARIANTS_ENV, "") not in ("", "0")
 
 TIER_HBM = "hbm"
 TIER_HOST = "host"
@@ -293,6 +304,7 @@ class AdapterStore:
             self.host_hits += 1
         elif source == "ssd":
             self.ssd_fetches += 1
+        self._debug_check(now)
         return plan
 
     def plan_access(self, server_id: int, adapter_id: str,
@@ -361,6 +373,7 @@ class AdapterStore:
             self._complete(p)
         for p in done:
             self._gc(p.adapter_id)
+        self._debug_check(now)
         return done
 
     def finish(self, plan: FetchPlan) -> None:
@@ -445,6 +458,24 @@ class AdapterStore:
 
     def check_invariant(self) -> bool:
         return all(len(self.index[a]) >= 1 for a in self.meta)
+
+    # -- debug invariant hook (shared with the model checker) -------------
+    def check_invariants(self, now: float = 0.0, routing=None,
+                         raise_on_violation: bool = False) -> List[str]:
+        """Full safety-invariant sweep (min-copy, index consistency,
+        tier exclusivity, in-flight source residency, retired-server
+        silence, link occupancy) — the same predicate the protocol
+        model checker evaluates at every explored state."""
+        from repro.analysis.protocol import check_store_invariants
+        errs = check_store_invariants(self, now, routing)
+        if errs and raise_on_violation:
+            raise RuntimeError("AdapterStore invariant violation:\n  "
+                               + "\n  ".join(errs))
+        return errs
+
+    def _debug_check(self, now: float = 0.0) -> None:
+        if runtime_checks_enabled():
+            self.check_invariants(now, raise_on_violation=True)
 
 
 # Legacy name: the synchronous pool grew into the tiered store; callers

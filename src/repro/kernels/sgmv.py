@@ -14,7 +14,12 @@ VMEM budget per grid step (fp32):
   shrink: block_t*d + d*r + block_t*r       (d=8192, r=128: ~4.3 MB)
   expand: block_t*r + r*block_o + block_t*block_o (block_o=2048: ~1.3 MB)
 Both well under the ~16 MB/core VMEM of TPU v5e; block shapes keep the
-MXU dims at multiples of 128 where the model dims allow.
+MXU dims at multiples of 128 where the model dims allow. Caveat found
+by ``repro.analysis.vmem``: the multibank kernel double-buffers every
+bucket's A/B blocks, so a full 5-bucket bank set at d=8192 fits the
+budget only at bf16 (~11 MB) — fp32 (~20 MB) is over it, which is fine
+for the CPU interpret-mode paths (no VMEM there) but means compiled
+TPU runs must use bf16 banks or fewer co-dispatched buckets.
 
 ``sgmv_fused_blocks`` fuses the pair: one grid sweep computes the
 (block_t, r) shrink product into a VMEM scratch at the first output

@@ -31,3 +31,7 @@ def batch_shard_size(mesh) -> int:
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
 HBM_BW = 819e9                 # bytes/s
 ICI_BW = 50e9                  # bytes/s per link
+# On-chip vector memory per core: the budget every Pallas kernel's
+# double-buffered blocks + scratch must fit in (repro.analysis.vmem
+# checks this statically against the kernels' BlockSpecs).
+VMEM_BYTES_PER_CORE = 16 * 2**20   # ~16 MiB

@@ -316,10 +316,12 @@ class ServingEngine:
         self.last_token = nxt
         self.decode_dispatches += 1
         now = self._clock()
+        # analysis: ignore[host-sync] the iteration's single sync point
+        nxt_np = np.asarray(nxt)
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
-            self._finish_token(slot, req, int(nxt[slot]), now)
+            self._finish_token(slot, req, int(nxt_np[slot]), now)
         self._iter += 1
 
     # -- multi-token decode steps ---------------------------------------
@@ -381,7 +383,8 @@ class ServingEngine:
             self.params, self.cache, self.last_token, self.bank,
             self._slot_lora, jnp.asarray(left, jnp.int32))
         self.decode_dispatches += 1
-        toks_np = np.asarray(toks)          # ONE host sync per k tokens
+        # analysis: ignore[host-sync] ONE sync per k tokens, by design
+        toks_np = np.asarray(toks)
         now = self._clock()
         for step in range(k):
             for slot, req in enumerate(self.slots):

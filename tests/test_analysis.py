@@ -1,0 +1,353 @@
+"""repro.analysis: lint-rule fixtures (must / must-not trigger), the
+static VMEM checker against inflated scratch, and the protocol model
+checker re-finding the PR 3 GC-vs-fetch race when the ``_gc`` in-flight
+guard is disabled."""
+import json
+import os
+import textwrap
+
+from repro.analysis import (ALL_RULES, Finding, Severity, has_errors,
+                            suppressions)
+from repro.analysis import protocol, vmem
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.linter import lint_source, lint_tree
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def _rules(src):
+    return [f.rule for f in lint_source(textwrap.dedent(src))]
+
+
+# --------------------------------------------------------------------------
+# linter: each rule has a fixture that must trigger and one that must not
+# --------------------------------------------------------------------------
+
+
+def test_host_sync_in_jit():
+    assert "host-sync" in _rules("""
+        @jax.jit
+        def f(x):
+            return x.item()
+        """)
+
+
+def test_host_sync_via_partial_jit_and_asarray():
+    assert "host-sync" in _rules("""
+        @functools.partial(jax.jit, static_argnums=0)
+        def f(k, x):
+            y = np.asarray(x)
+            return y
+        """)
+
+
+def test_host_sync_in_decode_path_method():
+    assert "host-sync" in _rules("""
+        class Engine:
+            def _decode_once(self, x):
+                return float(np.asarray(x)[0])
+        """)
+
+
+def test_no_host_sync_outside_hot_regions():
+    assert _rules("""
+        def summarize(x):
+            return x.item()
+        """) == []
+
+
+def test_host_sync_loop_per_element():
+    assert "host-sync-loop" in _rules("""
+        def step(batch):
+            toks = jnp.argmax(batch, axis=-1)
+            out = []
+            for i in range(4):
+                out.append(int(toks[i]))
+            return out
+        """)
+
+
+def test_host_sync_loop_quiet_after_materialize():
+    assert _rules("""
+        def step(batch):
+            toks = jnp.argmax(batch, axis=-1)
+            toks_np = np.asarray(toks)
+            out = []
+            for i in range(4):
+                out.append(int(toks_np[i]))
+            return out
+        """) == []
+
+
+def test_traced_if_on_jnp_value():
+    assert "traced-if" in _rules("""
+        @jax.jit
+        def g(x):
+            m = jnp.max(x)
+            if m > 0:
+                return x
+            return -x
+        """)
+
+
+def test_if_on_static_python_value_ok():
+    assert _rules("""
+        @jax.jit
+        def g(x, n_blocks):
+            if n_blocks > 4:
+                return x * 2
+            return x
+        """) == []
+
+
+def test_raw_pallas_call_without_interpret_resolution():
+    assert "raw-pallas-call" in _rules("""
+        def launch(x):
+            return pl.pallas_call(kernel, out_shape=x)(x)
+        """)
+
+
+def test_pallas_call_with_resolve_interpret_ok():
+    assert "raw-pallas-call" not in _rules("""
+        def launch(x, interpret=None):
+            interpret = resolve_interpret(interpret)
+            return pl.pallas_call(kernel, out_shape=x,
+                                  interpret=interpret)(x)
+        """)
+
+
+def test_mutable_default():
+    assert "mutable-default" in _rules("""
+        def f(a, acc=[]):
+            acc.append(a)
+            return acc
+        """)
+    assert _rules("""
+        def f(a, acc=None):
+            return (acc or []) + [a]
+        """) == []
+
+
+def test_shared_mutable_class_attr():
+    assert "shared-mutable-class-attr" in _rules("""
+        class Cache:
+            entries = {}
+        """)
+    assert _rules("""
+        class Cache:
+            __slots__ = ("entries",)
+            LIMIT = 4
+            def __init__(self):
+                self.entries = {}
+        """) == []
+
+
+def test_shared_mutable_dataclass_field():
+    assert "shared-mutable-dataclass" in _rules("""
+        @dataclasses.dataclass
+        class Cfg:
+            xs: List[int] = dataclasses.field(default=[])
+        """)
+    assert "shared-mutable-dataclass" in _rules("""
+        @dataclasses.dataclass
+        class Cfg:
+            xs: list = []
+        """)
+    assert _rules("""
+        @dataclasses.dataclass
+        class Cfg:
+            xs: List[int] = dataclasses.field(default_factory=list)
+        """) == []
+
+
+def test_side_effect_cond_statement():
+    assert "side-effect-cond" in _rules("""
+        def f(x, log):
+            log(x) if x else None
+        """)
+    assert _rules("""
+        def f(x, log):
+            y = log(x) if x else None
+            return y
+        """) == []
+
+
+# --------------------------------------------------------------------------
+# suppressions
+# --------------------------------------------------------------------------
+
+
+def test_suppression_same_line_and_line_above():
+    assert _rules("""
+        @jax.jit
+        def f(x):
+            return x.item()  # analysis: ignore[host-sync] sync by design
+        """) == []
+    assert _rules("""
+        @jax.jit
+        def f(x):
+            # analysis: ignore[host-sync] the one sanctioned sync point
+            return x.item()
+        """) == []
+
+
+def test_suppression_is_rule_scoped():
+    # an ignore for a different rule must not silence host-sync
+    assert "host-sync" in _rules("""
+        @jax.jit
+        def f(x):
+            return x.item()  # analysis: ignore[traced-if]
+        """)
+    # a bare marker silences everything on the line
+    assert _rules("""
+        @jax.jit
+        def f(x):
+            return x.item()  # analysis: ignore
+        """) == []
+
+
+def test_suppressions_parser():
+    supp = suppressions("a = 1  # analysis: ignore[r1, r2]\n"
+                        "# analysis: ignore\nb = 2\n")
+    assert supp[1] == {"r1", "r2"}
+    assert ALL_RULES in supp[2] and ALL_RULES in supp[3]
+
+
+def test_repo_tree_is_lint_clean():
+    findings = lint_tree(os.path.join(SRC, "repro"))
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# --------------------------------------------------------------------------
+# vmem: static budget check on the real kernels
+# --------------------------------------------------------------------------
+
+
+def _sgmv_source():
+    with open(os.path.join(SRC, "repro", "kernels", "sgmv.py")) as f:
+        return f.read()
+
+
+def test_vmem_bf16_envelope_fits():
+    src = _sgmv_source()
+    envs = vmem.kernel_envs(SRC, itemsize=2)
+    findings = vmem.analyze_source(src, "sgmv.py", envs,
+                                   vmem.vmem_budget(SRC))
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_vmem_fails_on_inflated_scratch():
+    src = _sgmv_source()
+    needle = "pltpu.VMEM((block_t, r), x_pad.dtype)"
+    assert needle in src, "fused-kernel scratch line moved; update test"
+    bad = src.replace(needle,
+                      "pltpu.VMEM((block_t, r * 4096), x_pad.dtype)")
+    envs = vmem.kernel_envs(SRC, itemsize=2)
+    findings = vmem.analyze_source(bad, "sgmv.py", envs,
+                                   vmem.vmem_budget(SRC))
+    assert any(f.rule == "vmem-budget" and
+               "sgmv_fused_blocks" in f.message for f in findings)
+    assert has_errors(findings)
+
+
+def test_vmem_fails_under_tiny_budget():
+    src = _sgmv_source()
+    envs = vmem.kernel_envs(SRC, itemsize=2)
+    findings = vmem.analyze_source(src, "sgmv.py", envs, budget=1 << 20)
+    assert any(f.rule == "vmem-budget" for f in findings)
+
+
+def test_vmem_full_pass_warns_only_on_fp32_headroom():
+    findings = vmem.analyze_kernels(SRC)
+    assert not has_errors(findings)
+    assert all(f.rule == "vmem-headroom" for f in findings)
+
+
+# --------------------------------------------------------------------------
+# protocol: exhaustive suite on the real store; race re-found on a
+# store with the _gc in-flight guard disabled
+# --------------------------------------------------------------------------
+
+
+def test_protocol_small_models_pass_exhaustively():
+    for name, res in protocol.small_model_suite():
+        assert res.ok, (name, res.violations[:3])
+        assert not res.truncated, f"{name} did not reach its fixpoint"
+        assert res.states > 50, f"{name} explored suspiciously few states"
+
+
+def test_protocol_refinds_pr3_gc_race_without_guard():
+    from repro.core.pool import AdapterStore
+
+    class Unguarded(AdapterStore):
+        """The pre-fix _gc: evicts without consulting in-flight plans
+        (simulates removing the guard in core/pool.py)."""
+
+        def _gc(self, adapter_id):
+            inflight, self._inflight = self._inflight, {}
+            try:
+                super()._gc(adapter_id)
+            finally:
+                self._inflight = inflight
+
+    res = protocol.check_model(
+        protocol.fetch_gc_model(store_cls=Unguarded, max_depth=5))
+    races = [v for v in res.violations
+             if v.invariant == "inflight-src-resident"]
+    assert races, "checker failed to re-find the GC-vs-fetch race"
+    assert any("GC-vs-fetch race" in v.message for v in races)
+    # the minimal counterexample is a real 4-action interleaving
+    assert min(len(v.trace) for v in races) <= 5
+
+
+def test_store_invariants_flag_manufactured_corruption():
+    w = protocol.World(protocol.fetch_gc_model())
+    assert w.invariant_errors() == []
+    w.store.local[0].discard("a0")          # index now lies
+    errs = w.invariant_errors()
+    assert any(e.startswith("index-consistent") for e in errs)
+
+
+def test_runtime_hook_env_gate(monkeypatch):
+    from repro.core.pool import runtime_checks_enabled
+    monkeypatch.delenv("REPRO_CHECK_INVARIANTS", raising=False)
+    assert not runtime_checks_enabled()
+    monkeypatch.setenv("REPRO_CHECK_INVARIANTS", "1")
+    assert runtime_checks_enabled()
+    w = protocol.World(protocol.fetch_gc_model())
+    assert w.store.check_invariants(now=0.0) == []
+
+
+# --------------------------------------------------------------------------
+# CLI: exit codes + report artifact
+# --------------------------------------------------------------------------
+
+
+def test_cli_lint_clean_tree_exits_zero(capsys):
+    assert analysis_main(["--passes=lint", "--root", SRC]) == 0
+
+
+def test_cli_exits_nonzero_on_seeded_fixture(tmp_path, capsys):
+    pkg = tmp_path / "repro"
+    pkg.mkdir()
+    (pkg / "bad.py").write_text("def f(a, acc=[]):\n    return acc\n")
+    report = tmp_path / "findings.json"
+    rc = analysis_main(["--passes=lint", "--root", str(tmp_path),
+                        "--report", str(report), "--format=github"])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "::error" in out and "mutable-default" in out
+    data = json.loads(report.read_text())
+    assert data and data[0]["rule"] == "mutable-default"
+
+
+def test_cli_rejects_unknown_pass():
+    assert analysis_main(["--passes=nope"]) == 2
+
+
+def test_finding_github_format():
+    f = Finding("a.py", 3, "r", "msg", Severity.WARNING, col=7)
+    assert f.format("github") == \
+        "::warning file=a.py,line=3,col=7,title=r::msg"
+    assert f.format() == "a.py:3:7: [r] msg"
