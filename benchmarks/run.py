@@ -12,9 +12,9 @@ import sys
 import time
 
 from . import (bench_ablation, bench_autoscale, bench_interference,
-               bench_kernels, bench_placement, bench_rank_skew,
-               bench_roofline, bench_scalability, bench_transfer,
-               bench_workloads)
+               bench_kernels, bench_mesh, bench_placement,
+               bench_rank_skew, bench_roofline, bench_scalability,
+               bench_transfer, bench_workloads)
 from .common import fmt_rows
 
 BENCHES = {
@@ -24,6 +24,7 @@ BENCHES = {
     # "kernel" (the old bench_kernel.py) was folded into "kernels":
     # its padding-tax / flash-skip rows now come from padding_tax_rows()
     "kernels": bench_kernels.run,
+    "mesh": bench_mesh.run,
     "placement": bench_placement.run,
     "workloads": bench_workloads.run,
     "scalability": bench_scalability.run,

@@ -555,21 +555,34 @@ def _ops_block_ts(src_root: str = _SRC_ROOT) -> Tuple[int, ...]:
             for arg, default in zip(node.args.kwonlyargs,
                                     node.args.kw_defaults):
                 if arg.arg == "block_t" and \
-                        isinstance(default, ast.Constant):
+                        isinstance(default, ast.Constant) and \
+                        isinstance(default.value, int):
                     vals.add(int(default.value))
         if isinstance(node, ast.Call):
             for kw in node.keywords:
                 if kw.arg == "block_t" and \
-                        isinstance(kw.value, ast.Constant):
+                        isinstance(kw.value, ast.Constant) and \
+                        isinstance(kw.value.value, int):
                     vals.add(int(kw.value.value))
+    # block_t=None defaults defer to the kernels/tune.py heuristic
+    # table: every block_t it can emit is reachable
+    from repro.kernels import tune as _tune
+    vals.update(_tune._BLOCK_T_TABLE.values())
     return tuple(sorted(vals)) or (1, 16)
 
 
-def kernel_envs(src_root: str = _SRC_ROOT,
-                itemsize: int = 2) -> Dict[str, List[Dict[str, object]]]:
+MODEL_SHARDS = (1, 2, 4, 8)
+
+
+def kernel_envs(src_root: str = _SRC_ROOT, itemsize: int = 2,
+                model_shards: Tuple[int, ...] = MODEL_SHARDS
+                ) -> Dict[str, List[Dict[str, object]]]:
     """Per-entry-point worst-case environments: every (block_t, max-d,
     max-rank) corner reachable through the ops.py wrappers, at the given
-    operand itemsize."""
+    operand itemsize — swept over the mesh-sharded engine's per-shard
+    slices too (each tp degree in ``model_shards`` shrinks the d_model /
+    d_out operand dims to d/s, which changes block geometry and can
+    flip the tune plan's residency decisions)."""
     space = _config_space()
     d = space["d"]
     ranks = space["ranks"]
@@ -578,19 +591,34 @@ def kernel_envs(src_root: str = _SRC_ROOT,
     na = 8
     envs: Dict[str, List[Dict[str, object]]] = {
         "sgmv_shrink": [], "sgmv_expand": [], "sgmv_fused_blocks": [],
-        "sgmv_multibank_blocks": [], "flash_mha": [],
+        "sgmv_multibank_blocks": [], "sgmv_multibank_shrink": [],
+        "sgmv_multibank_expand": [], "flash_mha": [],
     }
+    shard_ds = [d // s for s in model_shards if s >= 1 and d % s == 0]
     for bt in _ops_block_ts(src_root):
         t_pad = bt * 8
         nblocks = t_pad // bt
-        envs["sgmv_shrink"].append({
-            "x_pad": Arr((t_pad, d), itemsize),
-            "A": Arr((na, d, r), itemsize),
-            "block_adapter": Arr((nblocks,), 4), "block_t": bt})
-        envs["sgmv_expand"].append({
-            "h_pad": Arr((t_pad, r), itemsize),
-            "B": Arr((na, r, d), itemsize),
-            "block_adapter": Arr((nblocks,), 4), "block_t": bt})
+        for dl in shard_ds:
+            envs["sgmv_shrink"].append({
+                "x_pad": Arr((t_pad, dl), itemsize),
+                "A": Arr((na, dl, r), itemsize),
+                "block_adapter": Arr((nblocks,), 4), "block_t": bt})
+            envs["sgmv_expand"].append({
+                "h_pad": Arr((t_pad, r), itemsize),
+                "B": Arr((na, r, dl), itemsize),
+                "block_adapter": Arr((nblocks,), 4), "block_t": bt})
+            envs["sgmv_multibank_shrink"].append({
+                "x_pad": Arr((t_pad, dl), itemsize),
+                "A_banks": tuple(Arr((na, dl, rb), itemsize)
+                                 for rb in ranks),
+                "block_bucket": Arr((nblocks,), 4),
+                "block_row": Arr((nblocks,), 4), "block_t": bt})
+            envs["sgmv_multibank_expand"].append({
+                "h_pad": Arr((t_pad, r), itemsize),
+                "B_banks": tuple(Arr((na, rb, dl), itemsize)
+                                 for rb in ranks),
+                "block_bucket": Arr((nblocks,), 4),
+                "block_row": Arr((nblocks,), 4), "block_t": bt})
         envs["sgmv_fused_blocks"].append({
             "x_pad": Arr((t_pad, d), itemsize),
             "A": Arr((na, d, r), itemsize),
@@ -602,6 +630,24 @@ def kernel_envs(src_root: str = _SRC_ROOT,
                             Arr((na, rb, d), itemsize)) for rb in ranks),
             "block_bucket": Arr((nblocks,), 4),
             "block_row": Arr((nblocks,), 4), "block_t": bt})
+    # tune-plan corner: the geometry (block_t + bank residency) that
+    # sgmv_bucketed_fused actually dispatches with at the deployment
+    # envelope — the plan promises plan_vmem_bytes() <= budget, and this
+    # env makes the checker hold it to that with its own accounting
+    from repro.kernels import tune as _tune
+    for dl in shard_ds:
+        plan = _tune.block_plan(1024, dl, dl, tuple(ranks),
+                                tuple(na for _ in ranks))
+        t_pad = plan.block_t * 8
+        nblocks = t_pad // plan.block_t
+        envs["sgmv_multibank_blocks"].append({
+            "x_pad": Arr((t_pad, dl), itemsize),
+            "banks": tuple((Arr((na, dl, rb), itemsize),
+                            Arr((na, rb, dl), itemsize))
+                           for rb in ranks),
+            "block_bucket": Arr((nblocks,), 4),
+            "block_row": Arr((nblocks,), 4),
+            "block_t": plan.block_t, "resident": plan.resident})
     seq = 4096
     envs["flash_mha"].append({
         "q": Arr((1, 2, seq, hd), itemsize),

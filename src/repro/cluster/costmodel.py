@@ -32,6 +32,13 @@ Calibration (derivation):
     ITER_OVERHEAD over a k-token fused decode dispatch
     (``ServingEngine.decode_steps``) — one host round-trip per k tokens.
 
+  * Mesh-sharded engine terms: when ``mesh_shape=(dp, tp)`` is set the
+    model charges explicit ICI ring-all-reduce time per iteration
+    (``iteration_ici_time``): 2 activation all-reduces per layer plus
+    the co-sharded LoRA rank-r psum per target per layer — the exact
+    collectives the sharded ``ServingEngine`` issues. Zero at tp=1 and
+    when ``mesh_shape`` is None (legacy abstract-TP behavior unchanged).
+
 Hardware reference: A100 SXM 40GB (312 TF bf16, ~1.55 TB/s HBM), the
 paper's Standard_ND96asr_v4 nodes. The TPU deployment path of this repo
 uses the v5e constants in launch/roofline instead; the simulator keeps the
@@ -57,6 +64,11 @@ DECODE_LORA_DAMP = 0.15
 ITER_OVERHEAD = 4.0e-3       # scheduling/kernel-launch floor per iteration
 DISPATCH_OVERHEAD = 5e-6     # per extra kernel launch (unfused paths)
 LORA_TARGETS = 4             # q/k/v/o LoRA applications per layer
+# Interconnect constants for the mesh-sharded engine mode, mirrored from
+# launch/mesh.py (kept import-light: the simulator must not touch jax
+# device state by importing the mesh builders).
+ICI_BW = 50e9                # bytes/s per link
+ICI_LATENCY = 1e-6           # seconds per hop (per collective step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +79,52 @@ class ServerModel:
     tp: int = 4
     max_batch_tokens: int = 8192     # prefill token budget per iteration
     max_decode_batch: int = 64
+    # Engine mesh shape (dp, tp) for the mesh-sharded serving mode. None
+    # (the default) keeps the legacy single-device model: `tp` above then
+    # only scales compute/bandwidth (the paper's abstract TP) and NO ICI
+    # collective cost is charged. When set, the last entry is the tensor-
+    # parallel degree over the "model" axis and every iteration pays the
+    # explicit ring-all-reduce terms below.
+    mesh_shape: tuple | None = None
+
+    # -- mesh / interconnect ---------------------------------------------
+    @property
+    def tp_degree(self) -> int:
+        """Tensor-parallel degree over the "model" mesh axis."""
+        return self.mesh_shape[-1] if self.mesh_shape else self.tp
+
+    @property
+    def dp_degree(self) -> int:
+        return self.mesh_shape[0] if self.mesh_shape else 1
+
+    def ici_collective_time(self, nbytes: float) -> float:
+        """Ring all-reduce of an ``nbytes`` buffer over the "model" axis:
+        2(tp-1) hops of latency plus 2(tp-1)/tp of the buffer crossing
+        ICI. Exactly zero at tp=1 (no collective is issued) and when no
+        mesh is configured; strictly monotone in ``nbytes`` otherwise."""
+        tp = self.tp_degree
+        if self.mesh_shape is None or tp <= 1:
+            return 0.0
+        return (2 * (tp - 1) * ICI_LATENCY
+                + (2.0 * (tp - 1) / tp) * nbytes / ICI_BW)
+
+    def iteration_ici_time(self, n_tokens: int,
+                           bucket_tokens: Mapping[int, int] | None = None
+                           ) -> float:
+        """Per-iteration collective cost of the mesh-sharded engine: two
+        activation all-reduces per layer (attention o-proj + MLP down-
+        proj, (n_tokens, d_model) bf16) plus the co-sharded LoRA rank-r
+        psum — one per target per layer, sized (T_b, r_b) per bucket
+        (never the full d_model delta: the expand output is already
+        column-sharded like the base projection)."""
+        layers = self._n_layers()
+        t = 2 * layers * self.ici_collective_time(
+            2.0 * n_tokens * self.d_model)
+        for r, nt in (bucket_tokens or {}).items():
+            if r > 0 and nt > 0:
+                t += layers * LORA_TARGETS * self.ici_collective_time(
+                    2.0 * nt * r)
+        return t
 
     # -- primitives ------------------------------------------------------
     def lora_factor(self, rank: int) -> float:
@@ -102,6 +160,7 @@ class ServerModel:
         ``fused=False`` adds the legacy dispatchers' penalty."""
         base = self._prefill_per_token() * n_tokens
         t = ITER_OVERHEAD + base * (1.0 + self.lora_factor(max_rank))
+        t += self.iteration_ici_time(n_tokens, {max_rank: n_tokens})
         if not fused:
             t += self.unfused_penalty({max_rank: n_tokens})
         return t
@@ -120,6 +179,7 @@ class ServerModel:
         lora = sum(nt * self.lora_factor(r)
                    for r, nt in bucket_tokens.items())
         t = ITER_OVERHEAD + per_tok * (total + lora)
+        t += self.iteration_ici_time(total, dict(bucket_tokens))
         if not fused:
             t += self.unfused_penalty(dict(bucket_tokens))
         return t
@@ -153,6 +213,7 @@ class ServerModel:
         base = (weight_bytes + kv_bytes + lora_bytes) / (
             self.tp * A100_HBM * HBM_EFF_DECODE)
         t = ITER_OVERHEAD / max(1, steps) + base
+        t += self.iteration_ici_time(batch, {max_rank: batch})
         if not fused:
             t += self.unfused_penalty({max_rank: batch})
         return t
@@ -173,6 +234,7 @@ class ServerModel:
         base = (weight_bytes + kv_bytes + lora_bytes) / (
             self.tp * A100_HBM * HBM_EFF_DECODE)
         t = ITER_OVERHEAD / max(1, steps) + base
+        t += self.iteration_ici_time(batch, dict(bucket_batch))
         if not fused:
             t += self.unfused_penalty(dict(bucket_batch))
         return t

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from . import resolve_interpret
+from . import tune
 from .ref import sgmv_ref
 from .sgmv import (sgmv_expand, sgmv_fused_blocks, sgmv_multibank_blocks,
                    sgmv_shrink)
@@ -181,11 +182,11 @@ def sgmv_rank_bucketed(x, banks, token_adapter, adapter_rank_bucket,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("block_t", "interpret",
-                                             "scaling"))
+@functools.partial(jax.jit, static_argnames=("block_t", "resident",
+                                             "interpret", "scaling"))
 def sgmv_bucketed_fused(x, banks, token_adapter, adapter_bucket,
                         adapter_local=None, *, scaling: float = 1.0,
-                        block_t: int = 16, interpret=None):
+                        block_t=None, resident=None, interpret=None):
     """Single-dispatch rank-bucketed SGMV: the whole LoRA delta for a
     heterogeneous batch as ONE traced kernel sweep.
 
@@ -195,11 +196,23 @@ def sgmv_bucketed_fused(x, banks, token_adapter, adapter_bucket,
     is scalar-prefetched, and each block's dots run at its own bucket's
     rank inside one kernel. Fully jittable — the trace is stable across
     engine iterations for a fixed bank signature.
+
+    block_t=None / resident=None pick the block geometry from
+    ``kernels.tune.block_plan`` — the per-bucket (T_b, r_b, d) heuristic
+    table plus the bank-residency budget, memoized per bank signature.
+    Pass explicit values to pin a geometry (benchmarks, tests).
     """
     T, d = x.shape
     banks = tuple((A, B) for A, B in banks)
     Na = adapter_bucket.shape[0]
     nb = len(banks)
+    if block_t is None or resident is None:
+        plan = tune.block_plan(
+            T, d, banks[0][1].shape[-1],
+            tuple(A.shape[-1] for A, _ in banks),
+            tuple(A.shape[0] for A, _ in banks))
+        block_t = plan.block_t if block_t is None else block_t
+        resident = plan.resident if resident is None else resident
     token_adapter = jnp.asarray(token_adapter, jnp.int32)
     dest, block_adapter = prepare_segments_bucketed(
         token_adapter, adapter_bucket, Na, nb, block_t)
@@ -210,7 +223,8 @@ def sgmv_bucketed_fused(x, banks, token_adapter, adapter_bucket,
     T_pad = padded_len(T, Na, block_t)
     x_pad = jnp.zeros((T_pad, d), x.dtype).at[dest].set(x)
     y_pad = sgmv_multibank_blocks(x_pad, banks, block_bucket, block_row,
-                                  block_t=block_t, interpret=interpret)
+                                  block_t=block_t, resident=resident,
+                                  interpret=interpret)
     return y_pad[dest] * scaling
 
 

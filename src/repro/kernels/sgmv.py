@@ -189,27 +189,37 @@ def sgmv_fused_blocks(x_pad, A, B, block_adapter, *, block_t: int = 16,
 # ---------------------------------------------------------------------------
 
 
-def _make_multibank_kernel(bucket_ranks, n_ob):
+def _make_multibank_kernel(bucket_ranks, n_ob, resident, block_o):
     """Kernel factory closed over the static per-bucket ranks. The body
     branches on the block's scalar-prefetched bucket id; only the
     matching branch's dots execute, at that bucket's OWN rank — the
     rank-aware FLOP profile of the host-loop dispatcher, without the
     host loop. With one output block the shrink product stays in
-    registers; otherwise it parks in VMEM scratch across the j sweep."""
+    registers; otherwise it parks in VMEM scratch across the j sweep.
+
+    ``resident[b]`` buckets pass their WHOLE bank as the operand block
+    (constant index map — fetched once, see ``sgmv_multibank_blocks``),
+    so the kernel indexes the bank row itself; blocked buckets get the
+    per-row (1, d, r)/(1, r, bo) slice the index map already gathered.
+    """
     nb = len(bucket_ranks)
 
     def kernel_1ob(bkt_ref, row_ref, x_ref, *refs):
         o_ref = refs[2 * nb]
-        bkt = bkt_ref[pl.program_id(0)]
+        i = pl.program_id(0)
+        bkt = bkt_ref[i]
+        row = row_ref[i]
         for b, r_b in enumerate(bucket_ranks):
             a_ref, b_ref = refs[2 * b], refs[2 * b + 1]
 
             @pl.when(bkt == b)
-            def _(a_ref=a_ref, b_ref=b_ref):
-                h = jnp.dot(x_ref[...], a_ref[0],
+            def _(a_ref=a_ref, b_ref=b_ref, res=resident[b]):
+                a = a_ref[row] if res else a_ref[0]
+                bmat = b_ref[row] if res else b_ref[0]
+                h = jnp.dot(x_ref[...], a,
                             preferred_element_type=jnp.float32
                             ).astype(x_ref.dtype)
-                o_ref[...] = jnp.dot(h, b_ref[0],
+                o_ref[...] = jnp.dot(h, bmat,
                                      preferred_element_type=jnp.float32
                                      ).astype(o_ref.dtype)
 
@@ -217,19 +227,27 @@ def _make_multibank_kernel(bucket_ranks, n_ob):
         o_ref, h_ref = refs[2 * nb], refs[2 * nb + 1]
         i, j = pl.program_id(0), pl.program_id(1)
         bkt = bkt_ref[i]
+        row = row_ref[i]
         for b, r_b in enumerate(bucket_ranks):
             a_ref, b_ref = refs[2 * b], refs[2 * b + 1]
 
             @pl.when((bkt == b) & (j == 0))
-            def _(a_ref=a_ref, r_b=r_b):
+            def _(a_ref=a_ref, r_b=r_b, res=resident[b]):
+                a = a_ref[row] if res else a_ref[0]
                 h_ref[:, :r_b] = jnp.dot(
-                    x_ref[...], a_ref[0],
+                    x_ref[...], a,
                     preferred_element_type=jnp.float32).astype(h_ref.dtype)
 
             @pl.when(bkt == b)
-            def _(b_ref=b_ref, r_b=r_b):
+            def _(b_ref=b_ref, r_b=r_b, res=resident[b]):
+                if res:
+                    bmat = pl.load(
+                        b_ref, (row, slice(None), pl.dslice(j * block_o,
+                                                            block_o)))
+                else:
+                    bmat = b_ref[0]
                 o_ref[...] = jnp.dot(
-                    h_ref[:, :r_b], b_ref[0],
+                    h_ref[:, :r_b], bmat,
                     preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
     return kernel_1ob if n_ob == 1 else kernel
@@ -246,22 +264,42 @@ def _bank_b_map(b):
     return lambda i, j, bkt, row: (jnp.where(bkt[i] == b, row[i], 0), 0, j)
 
 
+def _resident_map(ndim):
+    # whole-bank operand: the index map is constant, so every grid step
+    # requests block (0, ..., 0) — the pipeline's revisiting
+    # optimization fetches it exactly ONCE (XLA hoists the
+    # loop-invariant slice in interpret mode), instead of re-fetching a
+    # per-row slice on every step like the blocked maps above.
+    return lambda *_: (0,) * ndim
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("block_t", "block_o", "interpret"))
+                   static_argnames=("block_t", "block_o", "resident",
+                                    "interpret"))
 def sgmv_multibank_blocks(x_pad, banks, block_bucket, block_row, *,
                           block_t: int = 16, block_o: int = 2048,
-                          interpret=None):
+                          resident=None, interpret=None):
     """One traced dispatch over a whole rank-bucketed bank set.
 
     x_pad: (T_pad, d) bucket-major segment-blocked tokens; banks: tuple
     of (A_b (Na_b, d, r_b), B_b (Na_b, r_b, d_out)) pairs in ascending
     bucket order; block_bucket/block_row: (nblocks,) int32 scalar-
     prefetched metadata (which bucket, which row of that bucket's bank).
-    Returns (T_pad, d_out)."""
+    Returns (T_pad, d_out).
+
+    resident: optional per-bucket bool tuple (from
+    ``kernels.tune.block_plan``). A resident bucket's whole A/B bank is
+    the operand block with a CONSTANT index map — fetched once for the
+    entire sweep instead of a per-row slice per step. That single fetch
+    is what fixes the rank-skew regression: with per-row blocked maps,
+    every one of the mostly-low-rank grid steps still re-fetched the
+    high-rank bucket's (d, r)/(r, d_out) slices."""
     interpret = resolve_interpret(interpret)
     T_pad, d = x_pad.shape
     d_out = banks[0][1].shape[-1]
     ranks = tuple(A.shape[-1] for A, _ in banks)
+    if resident is None:
+        resident = tuple(False for _ in banks)
     bo = min(block_o, d_out)
     pad_o = (-d_out) % bo
     n_ob = (d_out + pad_o) // bo
@@ -270,11 +308,16 @@ def sgmv_multibank_blocks(x_pad, banks, block_bucket, block_row, *,
     operands = [x_pad]
     for b, (A, B) in enumerate(banks):
         Bp = jnp.pad(B, ((0, 0), (0, 0), (0, pad_o)))
-        in_specs.append(pl.BlockSpec((1, d, ranks[b]), _bank_a_map(b)))
-        in_specs.append(pl.BlockSpec((1, ranks[b], bo), _bank_b_map(b)))
+        if resident[b]:
+            in_specs.append(pl.BlockSpec(A.shape, _resident_map(3)))
+            in_specs.append(pl.BlockSpec(Bp.shape, _resident_map(3)))
+        else:
+            in_specs.append(pl.BlockSpec((1, d, ranks[b]), _bank_a_map(b)))
+            in_specs.append(pl.BlockSpec((1, ranks[b], bo),
+                                         _bank_b_map(b)))
         operands.extend([A, Bp])
     out = pl.pallas_call(
-        _make_multibank_kernel(ranks, n_ob),
+        _make_multibank_kernel(ranks, n_ob, resident, bo),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(nblocks, n_ob),
@@ -285,6 +328,172 @@ def sgmv_multibank_blocks(x_pad, banks, block_bucket, block_row, *,
             [pltpu.VMEM((block_t, max(ranks)), x_pad.dtype)],
         ),
         out_shape=jax.ShapeDtypeStruct((T_pad, d_out + pad_o), x_pad.dtype),
+        interpret=interpret,
+    )(block_bucket, block_row, *operands)
+    return out[:, :d_out]
+
+
+# ---------------------------------------------------------------------------
+# Split multibank shrink / expand: the sharded per-shard reduction contract
+# ---------------------------------------------------------------------------
+#
+# Per-shard reduction contract (mesh-sharded serving): with the LoRA bank
+# co-sharded along the model axis — A sharded on d_model (each of the s
+# model shards holds a (Na, d/s, r) slice) and B sharded on d_out (each
+# holds (Na, r, d_out/s)) — the fused kernel cannot run as one dispatch
+# because the rank-r intermediate must be summed ACROSS shards between
+# the two dots. The sharded engine therefore runs, inside one shard_map:
+#
+#     h_local = sgmv_multibank_shrink(x_pad_local_d, A_shard, ...)
+#     h       = lax.psum(h_local, "model")     # ONE (T_pad, max_r) psum
+#     out     = sgmv_multibank_expand(h, B_shard, ...)
+#
+# Each shard's kernels see only their local d/s (shrink) and d_out/s
+# (expand) slices; the only cross-chip traffic is the rank-r
+# intermediate — never the full weights, activations, or the gathered
+# bank (S-LoRA's partitioned LoRA computation strategy). The expand
+# output is already sharded the same way as the base layer's column-
+# parallel projection output, so the delta adds in with no extra
+# collective. At tp=1 the pair is bit-identical to the fused kernel
+# (same dots, same inter-dot cast); under tp>1 the psum reassociates the
+# d-dim sum, so parity with the single-device engine is at token level
+# (argmax), not bitwise.
+
+
+def _make_multibank_shrink_kernel(bucket_ranks, resident):
+    nb = len(bucket_ranks)
+
+    def kernel(bkt_ref, row_ref, x_ref, *refs):
+        o_ref = refs[nb]
+        i = pl.program_id(0)
+        bkt = bkt_ref[i]
+        row = row_ref[i]
+        # zero-fill so columns above the block's own rank are defined
+        # (they participate in the cross-shard psum)
+        o_ref[...] = jnp.zeros_like(o_ref)
+        for b, r_b in enumerate(bucket_ranks):
+            a_ref = refs[b]
+
+            @pl.when(bkt == b)
+            def _(a_ref=a_ref, r_b=r_b, res=resident[b]):
+                a = a_ref[row] if res else a_ref[0]
+                o_ref[:, :r_b] = jnp.dot(
+                    x_ref[...], a,
+                    preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "resident", "interpret"))
+def sgmv_multibank_shrink(x_pad, A_banks, block_bucket, block_row, *,
+                          block_t: int = 16, resident=None,
+                          interpret=None):
+    """Shrink half of the multibank dispatch: x_pad (T_pad, d_local) x
+    per-bucket A (Na_b, d_local, r_b) -> (T_pad, max_r), columns above a
+    block's own bucket rank zero-filled. ``d_local`` may be a model-
+    sharded slice — see the per-shard reduction contract above."""
+    interpret = resolve_interpret(interpret)
+    T_pad, d = x_pad.shape
+    ranks = tuple(A.shape[-1] for A in A_banks)
+    if resident is None:
+        resident = tuple(False for _ in A_banks)
+    max_r = max(ranks)
+    nblocks = T_pad // block_t
+    in_specs = [pl.BlockSpec((block_t, d), lambda i, bkt, row: (i, 0))]
+    operands = [x_pad]
+    for b, A in enumerate(A_banks):
+        if resident[b]:
+            in_specs.append(pl.BlockSpec(A.shape, _resident_map(3)))
+        else:
+            in_specs.append(pl.BlockSpec(
+                (1, d, ranks[b]),
+                lambda i, bkt, row, b=b: (jnp.where(bkt[i] == b,
+                                                    row[i], 0), 0, 0)))
+        operands.append(A)
+    return pl.pallas_call(
+        _make_multibank_shrink_kernel(ranks, resident),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nblocks,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_t, max_r),
+                                   lambda i, bkt, row: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T_pad, max_r), x_pad.dtype),
+        interpret=interpret,
+    )(block_bucket, block_row, *operands)
+
+
+def _make_multibank_expand_kernel(bucket_ranks, n_ob, resident, block_o):
+    nb = len(bucket_ranks)
+
+    def kernel(bkt_ref, row_ref, h_ref, *refs):
+        o_ref = refs[nb]
+        i = pl.program_id(0)
+        j = pl.program_id(1) if n_ob > 1 else 0
+        bkt = bkt_ref[i]
+        row = row_ref[i]
+        for b, r_b in enumerate(bucket_ranks):
+            b_ref = refs[b]
+
+            @pl.when(bkt == b)
+            def _(b_ref=b_ref, r_b=r_b, res=resident[b]):
+                if res:
+                    bmat = pl.load(
+                        b_ref, (row, slice(None), pl.dslice(j * block_o,
+                                                            block_o)))
+                else:
+                    bmat = b_ref[0]
+                o_ref[...] = jnp.dot(
+                    h_ref[:, :r_b], bmat,
+                    preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_t", "block_o", "resident",
+                                    "interpret"))
+def sgmv_multibank_expand(h_pad, B_banks, block_bucket, block_row, *,
+                          block_t: int = 16, block_o: int = 2048,
+                          resident=None, interpret=None):
+    """Expand half of the multibank dispatch: h_pad (T_pad, max_r)
+    (typically the psum of per-shard shrink outputs) x per-bucket B
+    (Na_b, r_b, d_out_local) -> (T_pad, d_out_local)."""
+    interpret = resolve_interpret(interpret)
+    T_pad, max_r = h_pad.shape
+    d_out = B_banks[0].shape[-1]
+    ranks = tuple(B.shape[1] for B in B_banks)
+    if resident is None:
+        resident = tuple(False for _ in B_banks)
+    bo = min(block_o, d_out)
+    pad_o = (-d_out) % bo
+    n_ob = (d_out + pad_o) // bo
+    nblocks = T_pad // block_t
+    in_specs = [pl.BlockSpec((block_t, max_r),
+                             lambda i, j, bkt, row: (i, 0))]
+    operands = [h_pad]
+    for b, B in enumerate(B_banks):
+        Bp = jnp.pad(B, ((0, 0), (0, 0), (0, pad_o)))
+        if resident[b]:
+            in_specs.append(pl.BlockSpec(Bp.shape, _resident_map(3)))
+        else:
+            in_specs.append(pl.BlockSpec(
+                (1, ranks[b], bo),
+                lambda i, j, bkt, row, b=b: (jnp.where(bkt[i] == b,
+                                                       row[i], 0), 0, j)))
+        operands.append(Bp)
+    out = pl.pallas_call(
+        _make_multibank_expand_kernel(ranks, n_ob, resident, bo),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nblocks, n_ob),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_t, bo),
+                                   lambda i, j, bkt, row: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T_pad, d_out + pad_o), h_pad.dtype),
         interpret=interpret,
     )(block_bucket, block_row, *operands)
     return out[:, :d_out]

@@ -1,0 +1,167 @@
+"""Block-geometry heuristics for the SGMV dispatch wrappers.
+
+The multibank kernel's one static ``block_t`` was measured to be a
+regression on rank-skewed batches (``experiments/bench/kernels.csv``):
+with per-row blocked bank fetches, every grid step re-fetches every
+bucket's (d, r_b)/(r_b, d_out) A/B slices, so the high-rank bucket's
+~2 MB slices are paid on every block even when only a couple of blocks
+use them. The fix has two parts, both decided here per bank signature:
+
+* a per-bucket ``block_t`` preference from a small (T_b, r_b, d)-keyed
+  table (T_b = the bucket's expected token share), collapsed to the
+  dispatch's single grid ``block_t`` by expected-token weight, and
+* per-bucket bank **residency**: a resident bucket's A/B operands use a
+  whole-bank BlockSpec with a constant index map, so the fetch is
+  loop-invariant — the pipeline's revisiting optimization (and XLA LICM
+  under interpret mode) fetches it exactly once instead of per step.
+  Residency is granted smallest-bank-first under the per-core VMEM
+  budget at the bf16 deployment envelope, with the non-resident blocked
+  slices and the working blocks charged against the same budget.
+
+This module is import-light (no jax/numpy): ``repro.analysis.vmem``
+imports it to verify that every plan the dispatcher can pick respects
+the static VMEM envelope, including the sharded-engine corners where
+the kernels see ``d_model / model_shards`` slices.
+
+Plans are memoized per bank signature — (T, d, d_out, per-bucket ranks
+and adapter counts, itemsize) — which is exactly the granularity at
+which the serving engine's traces are cached, so a bank rebuild picks
+the new plan and a stable bank keeps its trace.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+# Mirrors launch/mesh.py:VMEM_BYTES_PER_CORE (that module imports jax at
+# top level; this one must stay import-light for repro.analysis).
+VMEM_BYTES_PER_CORE = 16 * 2**20
+
+# Deployment itemsize for residency budgeting: compiled TPU runs use
+# bf16 banks (see kernels/sgmv.py's VMEM caveat); fp32 runs are CPU
+# interpret-mode where no VMEM constraint exists.
+DEPLOY_ITEMSIZE = 2
+
+
+class BlockPlan(NamedTuple):
+    """Static block geometry for one multibank dispatch."""
+    block_t: int
+    resident: Tuple[bool, ...]     # per bucket, ascending bucket order
+
+
+# (T_b band, r_b band, d band) -> preferred block_t for that bucket.
+# Bands: T_b <= 128 | <= 1024 | larger; r_b <= 32 | larger; d <= 4096 |
+# larger. Values from the interpret-mode grid sweep in the bench: small
+# buckets want small blocks (per-adapter padding waste is bounded by
+# block_t, and a high-rank block's padded rows run high-rank dots);
+# large low-rank buckets amortize the per-step overhead with 64-row
+# blocks; at d > 4096 the (block_t, d) x-block itself dominates VMEM so
+# the block shrinks.
+_BLOCK_T_TABLE = {
+    ("small", "low", "narrow"): 16,
+    ("small", "high", "narrow"): 16,
+    ("mid", "low", "narrow"): 64,
+    ("mid", "high", "narrow"): 32,
+    ("large", "low", "narrow"): 64,
+    ("large", "high", "narrow"): 64,
+    ("small", "low", "wide"): 16,
+    ("small", "high", "wide"): 16,
+    ("mid", "low", "wide"): 32,
+    ("mid", "high", "wide"): 32,
+    ("large", "low", "wide"): 32,
+    ("large", "high", "wide"): 32,
+}
+
+
+def _t_band(t_b: int) -> str:
+    if t_b <= 128:
+        return "small"
+    if t_b <= 1024:
+        return "mid"
+    return "large"
+
+
+def _r_band(r_b: int) -> str:
+    return "low" if r_b <= 32 else "high"
+
+
+def _d_band(d: int) -> str:
+    return "narrow" if d <= 4096 else "wide"
+
+
+def bucket_block_t(t_b: int, r_b: int, d: int) -> int:
+    """Preferred block_t for one bucket of ~t_b tokens at rank r_b."""
+    return _BLOCK_T_TABLE[(_t_band(t_b), _r_band(r_b), _d_band(d))]
+
+
+@functools.lru_cache(maxsize=256)
+def block_plan(T: int, d: int, d_out: int,
+               ranks: Tuple[int, ...], counts: Tuple[int, ...],
+               *, block_o: int = 2048,
+               itemsize: int = DEPLOY_ITEMSIZE,
+               vmem_budget: int = VMEM_BYTES_PER_CORE) -> BlockPlan:
+    """Pick the dispatch block geometry for a rank-bucketed bank set.
+
+    T: tokens in the batch; d/d_out: model dims the kernel sees (the
+    sharded engine passes its local ``d / model_shards`` slice sizes);
+    ranks/counts: per-bucket (r_b, n_adapters_b) in ascending bucket
+    order — together these are the bank signature, so the lru_cache
+    realizes "cache the choice per bank signature".
+    """
+    n_total = max(1, sum(counts))
+    # token share estimate per bucket (counts are all that is static)
+    t_est = [max(1, T * n_b // n_total) for n_b in counts]
+    # expected-token-weighted vote collapses per-bucket preferences to
+    # the dispatch's single grid block_t
+    votes = {}
+    for t_b, r_b, n_b in zip(t_est, ranks, counts):
+        bt = bucket_block_t(t_b, r_b, d)
+        votes[bt] = votes.get(bt, 0) + t_b
+    block_t = max(sorted(votes), key=lambda bt: votes[bt])
+    # a block_t above the largest plausible segment only adds padding
+    while block_t > 16 and block_t > max(t_est):
+        block_t //= 2
+
+    bo = min(block_o, d_out)
+    # working set (double-buffered x/out blocks + the widest h scratch)
+    working = 2 * block_t * d * itemsize \
+        + 2 * block_t * bo * itemsize \
+        + block_t * max(ranks) * itemsize
+    # start with every bank blocked (2x double-buffered slices); the
+    # resident whole-bank block is charged at 2x as well — one fetch at
+    # runtime, but the pipeline still allocates double buffers, and the
+    # static checker (analysis/vmem.py) applies the same uniform rule
+    blocked_cost = [2 * (d * r + r * bo) * itemsize for r in ranks]
+    resident_cost = [2 * n * (d * r + r * (d_out + (-d_out) % bo)) * itemsize
+                     for n, r in zip(counts, ranks)]
+    resident = [False] * len(ranks)
+    used = working + sum(blocked_cost)
+    # grant residency smallest-bank-first: maximizes how many buckets
+    # stop paying per-step fetches under the same budget
+    order = sorted(range(len(ranks)), key=lambda b: resident_cost[b])
+    for b in order:
+        new_used = used - blocked_cost[b] + resident_cost[b]
+        if new_used <= vmem_budget:
+            resident[b] = True
+            used = new_used
+    return BlockPlan(block_t=block_t, resident=tuple(resident))
+
+
+def plan_vmem_bytes(plan: BlockPlan, d: int, d_out: int,
+                    ranks: Tuple[int, ...], counts: Tuple[int, ...],
+                    *, block_o: int = 2048,
+                    itemsize: int = DEPLOY_ITEMSIZE) -> int:
+    """VMEM bytes the multibank dispatch needs under ``plan`` — the same
+    accounting ``block_plan`` budgets with, exposed for the static
+    checker so plan and check can never drift apart."""
+    bo = min(block_o, d_out)
+    total = 2 * plan.block_t * d * itemsize \
+        + 2 * plan.block_t * bo * itemsize \
+        + plan.block_t * max(ranks) * itemsize
+    for b, (n, r) in enumerate(zip(counts, ranks)):
+        if plan.resident[b]:
+            total += 2 * n * (d * r + r * (d_out + (-d_out) % bo)) \
+                * itemsize
+        else:
+            total += 2 * (d * r + r * bo) * itemsize
+    return total

@@ -16,6 +16,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_engine_mesh(dp: int = 1, tp: int = 1, *, devices=None):
+    """Mesh for a single serving engine: (dp, tp) over ("data", "model"),
+    built from the first dp*tp available devices. The engine shards base
+    weights / KV / LoRA banks over "model" and the batch over "data";
+    dp=tp=1 yields a trivial 1x1 mesh the engine treats as single-device.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    if devices is None:
+        devices = jax.devices()
+    n = dp * tp
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh {dp}x{tp} needs {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(dp, tp),
+                ("data", "model"))
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes that shard the batch dimension."""
     names = mesh.axis_names
@@ -31,6 +49,7 @@ def batch_shard_size(mesh) -> int:
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
 HBM_BW = 819e9                 # bytes/s
 ICI_BW = 50e9                  # bytes/s per link
+ICI_LATENCY = 1e-6             # seconds per ICI hop (collective step)
 # On-chip vector memory per core: the budget every Pallas kernel's
 # double-buffered blocks + scratch must fit in (repro.analysis.vmem
 # checks this statically against the kernels' BlockSpecs).

@@ -76,6 +76,12 @@ def main():
                          "(any backend) or the fused Pallas SGMV "
                          "kernels (compiled on TPU, interpreted "
                          "elsewhere)")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="mesh-sharded engines: 'dp,tp' shards each "
+                         "engine over a (data, model) device mesh with "
+                         "co-sharded LoRA banks (needs dp*tp devices; "
+                         "on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--access-mode", default="migrate",
                     choices=["migrate", "remote-read"],
                     help="on a placement miss: block on the adapter "
@@ -125,11 +131,16 @@ def main():
                              min_servers=args.min_servers,
                              max_servers=args.max_servers))
 
+    mesh_shape = None
+    if args.mesh:
+        dp, tp = (int(v) for v in args.mesh.split(","))
+        mesh_shape = (dp, tp)
     backend = EngineBackend(cfg, params, args.servers, max_batch=4,
                             max_len=args.prompt_len + args.max_new + 8,
                             seed=args.seed, bank_mode=args.bank_mode,
                             decode_block=args.decode_block,
-                            lora_kernel=args.lora_kernel)
+                            lora_kernel=args.lora_kernel,
+                            mesh_shape=mesh_shape)
     cluster = LoRAServeCluster(
         backend, adapters, policy=args.policy, network=NetworkModel(),
         rebalance_period=args.rebalance_period, seed=args.seed,
@@ -144,7 +155,7 @@ def main():
               f"bank_adapters={mem['n_adapters']} "
               f"bank_max_rank={mem['max_rank']}")
     s = report.summary
-    print(f"bank_mode={report.bank_mode}")
+    print(f"bank_mode={report.bank_mode} mesh={report.mesh_shape}")
     print(f"policy={args.policy} finished={report.completed()}"
           f"/{len(trace)} p95_ttft={s['p95_ttft']:.3f}s "
           f"mean_tbt={s['mean_tbt'] * 1e3:.1f}ms "

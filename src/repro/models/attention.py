@@ -25,6 +25,17 @@ def _zero_lora(name, x):
     return 0.0
 
 
+# shard_map moved to the jax root (and check_rep became check_vma) in
+# newer jax; support both so the head-parallel path runs on the pinned
+# 0.4.x toolchain too.
+try:
+    from jax import shard_map as _shard_map
+    _SM_NOCHECK = {"check_vma": False}
+except ImportError:                                    # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_NOCHECK = {"check_rep": False}
+
+
 def run_flash(q, k, v, *, causal, q_positions, k_positions, window=0,
               scale=None, extra_qk=None):
     """Flash attention, head-parallel under shard_map when the mesh
@@ -49,24 +60,23 @@ def run_flash(q, k, v, *, causal, q_positions, k_positions, window=0,
         if env.batch and B % bsz == 0 else None
     hspec = P(bspec, None, m, None)
 
-    from jax import shard_map
     if extra_qk is not None:
         q2, k2 = extra_qk
 
         def local(q, k, v, q2, k2):
             return flash_attention(q, k, v, **{**kw, "extra_qk": (q2, k2)})
 
-        return shard_map(local, mesh=mesh,
-                         in_specs=(hspec, hspec, hspec, hspec,
-                                   P(bspec, None, None)),
-                         out_specs=hspec,
-                         check_vma=False)(q, k, v, q2, k2)
+        return _shard_map(local, mesh=mesh,
+                          in_specs=(hspec, hspec, hspec, hspec,
+                                    P(bspec, None, None)),
+                          out_specs=hspec,
+                          **_SM_NOCHECK)(q, k, v, q2, k2)
 
     def local(q, k, v):
         return flash_attention(q, k, v, **kw)
 
-    return shard_map(local, mesh=mesh, in_specs=(hspec, hspec, hspec),
-                     out_specs=hspec, check_vma=False)(q, k, v)
+    return _shard_map(local, mesh=mesh, in_specs=(hspec, hspec, hspec),
+                      out_specs=hspec, **_SM_NOCHECK)(q, k, v)
 
 
 # ---------------------------------------------------------------------------

@@ -35,6 +35,14 @@ class AxisEnv:
     batch: Tuple[str, ...] = ()
     model: Optional[str] = None
     mesh: Optional[object] = None      # physical Mesh (for shard_map paths)
+    # LoRA sharding scheme for the serving path. None follows
+    # SHARDING_MODE (replicated banks in "opt", rank-TP in "baseline");
+    # "coshard" is the mesh-sharded engine's scheme: A sharded on
+    # d_model, B on d_out, so each shard computes a partial rank-r
+    # intermediate that is reduced with ONE psum and the expand output
+    # comes out column-sharded like the base projection — the full-width
+    # delta is never gathered.
+    lora: Optional[str] = None
 
     @property
     def active(self) -> bool:
@@ -50,9 +58,9 @@ def current_axis_env() -> AxisEnv:
 
 @contextlib.contextmanager
 def axis_env(batch: Tuple[str, ...] = (), model: Optional[str] = None,
-             mesh=None):
+             mesh=None, lora: Optional[str] = None):
     prev = current_axis_env()
-    _LOCAL.env = AxisEnv(tuple(batch), model, mesh)
+    _LOCAL.env = AxisEnv(tuple(batch), model, mesh, lora)
     try:
         yield _LOCAL.env
     finally:

@@ -115,13 +115,21 @@ class SimBackend:
     def __init__(self, n_servers: int, server_model=None,
                  timeout: float = 120.0,
                  adapter_nbytes: Optional[Dict[str, int]] = None,
-                 bank_mode: str = "padded", decode_block: int = 1):
+                 bank_mode: str = "padded", decode_block: int = 1,
+                 mesh_shape: Optional[tuple] = None):
         from repro.cluster.costmodel import ServerModel
         from repro.cluster.server import SimServer
         self.n_servers = n_servers
         self.bank_mode = bank_mode
         self.decode_block = decode_block
-        self.model = server_model or ServerModel()
+        self.mesh_shape = mesh_shape
+        if server_model is None:
+            # mesh-sharded servers: tp follows the mesh's "model" extent
+            # and iteration times include the explicit ICI terms
+            server_model = ServerModel(mesh_shape=mesh_shape,
+                                       tp=mesh_shape[-1]) \
+                if mesh_shape else ServerModel()
+        self.model = server_model
         self.servers = [SimServer(i, self.model, bank_mode=bank_mode,
                                   decode_block=decode_block)
                         for i in range(n_servers)]
@@ -270,7 +278,8 @@ class EngineBackend:
                  max_batch: int = 4, max_len: int = 64, seed: int = 0,
                  timeout: float = 120.0, page_pool_factory=None,
                  bank_mode: str = "padded", decode_block: int = 1,
-                 lora_kernel: str = "einsum"):
+                 lora_kernel: str = "einsum",
+                 mesh_shape: Optional[tuple] = None):
         from .engine import ServingEngine
         self._engine_cls = ServingEngine
         self.cfg = cfg
@@ -279,6 +288,14 @@ class EngineBackend:
         self.bank_mode = bank_mode
         self.decode_block = decode_block
         self.lora_kernel = lora_kernel
+        # mesh-sharded engines: every server's engine runs over its own
+        # (dp, tp) mesh built from the process's devices. None keeps the
+        # single-device engines unchanged.
+        self.mesh_shape = mesh_shape
+        self._mesh = None
+        if mesh_shape is not None:
+            from repro.launch.mesh import make_engine_mesh
+            self._mesh = make_engine_mesh(*mesh_shape)
         self.max_batch = max_batch
         self.max_len = max_len
         self.seed = seed
@@ -375,7 +392,7 @@ class EngineBackend:
                 max_batch=self.max_batch, max_len=self.max_len,
                 seed=self.seed, bank_mode=self.bank_mode,
                 decode_block=self.decode_block,
-                lora_kernel=self.lora_kernel,
+                lora_kernel=self.lora_kernel, mesh=self._mesh,
                 page_pool=pool, clock=self.wall_now)
         else:
             self.engines[server_id].load_adapters(adapter_ranks)

@@ -71,6 +71,7 @@ class ClusterReport:
     memory_profile: List[dict]
     warmup: float = 0.0
     bank_mode: str = "padded"          # bank layout the backend ran with
+    mesh_shape: Optional[tuple] = None  # (dp, tp) engine mesh, if sharded
     # adapter data-plane telemetry
     access_mode: str = "migrate"       # migrate | remote-read
     remote_reads: int = 0              # misses served via peer GDR reads
@@ -425,6 +426,7 @@ class LoRAServeCluster:
             memory_profile=self.backend.memory_profile(),
             warmup=self.warmup,
             bank_mode=getattr(self.backend, "bank_mode", "padded"),
+            mesh_shape=getattr(self.backend, "mesh_shape", None),
             access_mode=self.access_mode,
             remote_reads=store.remote_reads,
             prefetches=store.prefetches,

@@ -26,6 +26,15 @@ server's bank while requests are decoding.
 or ``"bucketed"`` (power-of-two rank buckets, each at its own rank).
 Both produce token-identical outputs; they differ only in compute cost,
 which makes padded-vs-bucketed A/Bs meaningful on this real engine.
+
+``mesh`` (a ("data", "model") Mesh, e.g. ``launch.mesh.make_engine_mesh``)
+turns on the mesh-sharded serving mode: base weights, activations, and
+the KV cache shard over the mesh, LoRA banks co-shard along
+d_model/d_out so the SGMV kernels run per-shard with a single rank-r
+psum (``serving.sharding``), and every jitted call traces under the
+mesh + axis env. Token streams are identical to the single-device
+engine — sharding changes placement and collectives, not numerics
+(argmax decoding absorbs the psum reassociation rounding).
 """
 from __future__ import annotations
 
@@ -52,14 +61,21 @@ class ServingEngine:
                  *, max_batch: int = 8, max_len: int = 512,
                  seed: int = 0, scaling: float = 1.0,
                  bank_mode: str = "padded", decode_block: int = 1,
-                 lora_kernel: str = "einsum",
+                 lora_kernel: str = "einsum", mesh=None,
                  page_pool: Optional[UnifiedPagePool] = None,
                  clock: Callable[[], float] = time.monotonic):
+        from .sharding import make_engine_sharding
         self.cfg = cfg
         self.bank_mode = bank_mode
         self.decode_block = decode_block
         self.lora_kernel = lora_kernel
         self.page_pool = page_pool
+        # mesh-sharded mode: a ("data","model") Mesh shards base
+        # weights, KV cache, activations, and (co-sharded) LoRA banks;
+        # None keeps the legacy single-device engine byte-for-byte
+        self.sharding = make_engine_sharding(mesh, cfg, max_batch)
+        if self.sharding is not None:
+            params = self.sharding.shard_params(params)
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
@@ -86,6 +102,8 @@ class ServingEngine:
                    else (cfg.n_frontend_tokens or None))
         self.cache = M.init_cache(cfg, max_batch, max_len,
                                   jnp.float32, enc_len=enc_len)
+        if self.sharding is not None:
+            self.cache = self.sharding.shard_cache(self.cache)
 
         cfgc = cfg
         kern = lora_kernel
@@ -111,12 +129,28 @@ class ServingEngine:
         self._merge_many = jax.jit(_merge_many, donate_argnums=(0,))
         self._prefill_cache = {}
 
+    def _ctx(self):
+        """Mesh + axis-env context every jitted call runs under (tracing
+        picks up the sharding constraints); a no-op when unsharded."""
+        import contextlib
+        if self.sharding is None:
+            return contextlib.nullcontext()
+        return self.sharding.ctx()
+
     # -- placement-aware bank management --------------------------------
     def _rebuild_bank(self, adapter_ranks: Dict[str, int]) -> None:
         self.adapter_ranks = adapter_ranks
         n_layers = 1 if self.cfg.family == "hybrid" else self.cfg.n_layers
         self.lora_bank = build_bank(self.cfg, adapter_ranks, self._bank_key,
                                     mode=self.bank_mode, n_layers=n_layers)
+        if self.sharding is not None:
+            # re-apply the co-sharded layout on every rebuild: placement
+            # changes (install/evict/rebalance) reshape the bank but must
+            # not silently de-shard it
+            import dataclasses
+            self.lora_bank = dataclasses.replace(
+                self.lora_bank,
+                data=self.sharding.shard_bank(self.lora_bank.data))
         self.adapter_ids = list(self.lora_bank.adapter_ids)
         # O(1) id -> bank-row lookups on the admit path (rebuilt here, the
         # only place the layout changes)
@@ -160,6 +194,13 @@ class ServingEngine:
         if weights is not None:
             self.lora_bank = self.lora_bank.set_adapter(adapter_id,
                                                         weights)
+            if self.sharding is not None:
+                # scatter of the peer rows de-constrains the layout;
+                # re-pin the co-sharded placement
+                import dataclasses
+                self.lora_bank = dataclasses.replace(
+                    self.lora_bank,
+                    data=self.sharding.shard_bank(self.lora_bank.data))
             self.bank = self.lora_bank.data
         return added
 
@@ -260,16 +301,19 @@ class ServingEngine:
                 (n, self.cfg.encoder.n_frames, self.cfg.d_model))
         fn = self._prefill_fn(length)
         lidx = self.lora_bank.lora_idx(jnp.asarray(aidx, jnp.int32))
-        if frontend is not None:
-            logits, cache1 = fn(self.params, toks, self.bank, lidx,
-                                frontend)
-        else:
-            logits, cache1 = fn(self.params, toks, self.bank, lidx)
+        with self._ctx():
+            if frontend is not None:
+                logits, cache1 = fn(self.params, toks, self.bank, lidx,
+                                    frontend)
+            else:
+                logits, cache1 = fn(self.params, toks, self.bank, lidx)
         self.prefill_dispatches += 1
         firsts = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         slots = jnp.asarray([slot for slot, _ in grp], jnp.int32)
-        self.cache = self._merge_many(self.cache, cache1, slots,
-                                      jnp.full((n,), length, jnp.int32))
+        with self._ctx():
+            self.cache = self._merge_many(self.cache, cache1, slots,
+                                          jnp.full((n,), length,
+                                                   jnp.int32))
         self.slot_adapter = self.slot_adapter.at[slots].set(
             jnp.asarray(aidx, jnp.int32))
         self.last_token = self.last_token.at[slots].set(
@@ -309,9 +353,10 @@ class ServingEngine:
     def _decode_once(self) -> None:
         if not any(s is not None for s in self.slots):
             return
-        logits, self.cache = self._decode(
-            self.params, self.cache, self.last_token, self.bank,
-            self._slot_lora)
+        with self._ctx():
+            logits, self.cache = self._decode(
+                self.params, self.cache, self.last_token, self.bank,
+                self._slot_lora)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.last_token = nxt
         self.decode_dispatches += 1
@@ -379,9 +424,10 @@ class ServingEngine:
         # freeze on device): one trace per (k, bank signature) instead
         # of retracing for every distinct tail length
         fn = self._decode_k_fn(k)
-        self.cache, self.last_token, toks = fn(
-            self.params, self.cache, self.last_token, self.bank,
-            self._slot_lora, jnp.asarray(left, jnp.int32))
+        with self._ctx():
+            self.cache, self.last_token, toks = fn(
+                self.params, self.cache, self.last_token, self.bank,
+                self._slot_lora, jnp.asarray(left, jnp.int32))
         self.decode_dispatches += 1
         # analysis: ignore[host-sync] ONE sync per k tokens, by design
         toks_np = np.asarray(toks)

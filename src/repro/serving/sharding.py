@@ -1,0 +1,133 @@
+"""Mesh-sharded serving: the sharding layer of the engine's first-class
+tensor/data-parallel mode.
+
+``EngineSharding`` binds a ("data", "model") mesh to one engine and owns
+every placement decision the sharded mode needs:
+
+* base params  — the model's PartitionSpec rules (column/row-parallel
+  projections, sharded embed/lm_head), via ``launch.specs``;
+* KV cache     — the serving layout rules (sequence-sharded in "opt"
+  mode, kv-head-sharded in "baseline"), via ``launch.specs``;
+* LoRA banks   — the CO-SHARDED scheme: every bucket's A bank is split
+  along d_model and its B bank along d_out, so the fused SGMV kernels
+  run per-shard on their local d/n_shards slice, the rank-r intermediate
+  is reduced with ONE psum, and the expand output comes out column-
+  sharded exactly like the base projection it is added to. Neither the
+  full bank nor the full-width delta ever materializes on one device
+  (see the per-shard reduction contract in ``repro.kernels.sgmv``);
+* activations  — via the ambient axis env: ``ctx()`` enters the mesh
+  and an ``axis_env(batch=..., model="model", lora="coshard")`` so
+  every ``constrain`` call in the model and the LoRA paths resolves to
+  real mesh axes at trace time.
+
+Shardings are *fitted*: any dim a mesh axis does not evenly divide
+falls back to replicated (``launch.specs.fit_spec``), so the same
+engine code serves a 1x1 mesh (trivially single-device), a 2x4 CPU
+host-device mesh in tests, and a production TPU slice.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import axis_env, param_pspecs
+
+
+def _fitted(mesh, spec: P, x):
+    from repro.launch.specs import fitted_ns
+    return fitted_ns(mesh, spec, x)
+
+
+class EngineSharding:
+    """Sharding context for one ``ServingEngine`` over a (dp, tp) mesh
+    with axes ("data", "model")."""
+
+    def __init__(self, mesh, cfg, max_batch: int):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.dp = int(mesh.shape.get("data", 1))
+        self.tp = int(mesh.shape.get("model", 1))
+        # the engine's slot batch shards over "data" only when divisible
+        # (jit argument shardings require it; constraints would too)
+        self.batch_axes = ("data",) if self.dp > 1 \
+            and max_batch % self.dp == 0 else ()
+
+    # -- placement -------------------------------------------------------
+    def shard_params(self, params):
+        """device_put the base weights with the model's partition rules
+        (column/row-parallel projections over "model")."""
+        specs = param_pspecs(params)
+        sh = jax.tree.map(lambda s, p: _fitted(self.mesh, s, p),
+                          specs, params,
+                          is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(params, sh)
+
+    def shard_cache(self, cache):
+        """device_put the KV/state cache with the serving layout rules
+        (sequence-sharded over "model" in "opt" mode)."""
+        from repro.launch.specs import _cache_sharding
+        sh = _cache_sharding(self.mesh, self.cfg, cache,
+                             self._cache_batch(cache))
+        return jax.device_put(cache, sh)
+
+    def _cache_batch(self, cache) -> int:
+        pos = cache.get("pos")
+        return int(pos.shape[0]) if pos is not None else 1
+
+    def bank_spec(self, x, name: str) -> NamedSharding:
+        """Co-sharded bank rule for one leaf: A (..., d, r) split on
+        d_model, B (..., r, d_out) split on d_out."""
+        nd = x.ndim
+        if name == "A":
+            spec = P(*([None] * (nd - 2) + ["model", None]))
+        else:
+            spec = P(*([None] * (nd - 1) + ["model"]))
+        return _fitted(self.mesh, spec, x)
+
+    def shard_bank(self, bank_data):
+        """device_put a bank pytree (padded dict or bucketed tuple of
+        dicts) with the co-sharded A/B rules. Called after every bank
+        rebuild / install so mid-flight placement changes keep the
+        sharded layout."""
+
+        def leaf(path, x):
+            name = None
+            for e in reversed(path):
+                if isinstance(e, jax.tree_util.DictKey):
+                    name = str(e.key)
+                    break
+            return self.bank_spec(x, name or "B")
+
+        sh = jax.tree_util.tree_map_with_path(leaf, bank_data)
+        return jax.device_put(bank_data, sh)
+
+    def replicate(self, x):
+        """Small operands (tokens, indices) live replicated."""
+        return jax.device_put(
+            x, jax.tree.map(
+                lambda v: NamedSharding(self.mesh, P(*([None] * v.ndim))),
+                x))
+
+    # -- trace context ---------------------------------------------------
+    def ctx(self):
+        """Context every jitted engine call runs (and traces) under: the
+        physical mesh (bare-PartitionSpec constraints need it at trace
+        time) plus the axis env that routes ``constrain`` calls and
+        selects the co-sharded LoRA scheme."""
+        stack = contextlib.ExitStack()
+        stack.enter_context(self.mesh)
+        stack.enter_context(axis_env(
+            batch=self.batch_axes, model="model" if self.tp > 1 else None,
+            mesh=self.mesh, lora="coshard" if self.tp > 1 else None))
+        return stack
+
+
+def make_engine_sharding(mesh, cfg, max_batch: int):
+    """None-propagating factory: a missing/trivial mesh means the engine
+    runs exactly as before (no device_put, no axis env)."""
+    if mesh is None:
+        return None
+    return EngineSharding(mesh, cfg, max_batch)

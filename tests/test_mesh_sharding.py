@@ -1,0 +1,131 @@
+"""Mesh-sharded serving: cost-model ICI terms (in-process) and token
+parity of the (dp, tp)-sharded engine against the single-device engine
+(subprocess — the suite's conftest pins this process to ONE CPU device,
+so the 8-host-device mesh runs in its own interpreter with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+import os
+import subprocess
+import sys
+
+from repro.cluster.costmodel import ICI_LATENCY, ServerModel
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+# -- ICI collective terms ------------------------------------------------
+
+def test_ici_zero_without_mesh_and_at_tp1():
+    legacy = ServerModel(tp=4)                       # abstract TP only
+    assert legacy.ici_collective_time(1e9) == 0.0
+    assert legacy.iteration_ici_time(4096, {64: 4096}) == 0.0
+    tp1 = ServerModel(tp=4, mesh_shape=(2, 1))       # dp-only mesh
+    assert tp1.ici_collective_time(1e9) == 0.0
+    # a trivial mesh changes nothing about iteration times
+    assert legacy.prefill_time(4096, 64) == \
+        ServerModel(tp=4, mesh_shape=(1, 1)).prefill_time(4096, 64)
+
+
+def test_ici_monotone_in_bytes_and_tp():
+    m = ServerModel(tp=4, mesh_shape=(1, 4))
+    ts = [m.ici_collective_time(b) for b in (0, 1e6, 1e7, 1e8)]
+    assert all(a < b for a, b in zip(ts, ts[1:]))
+    assert ts[0] == 2 * 3 * ICI_LATENCY              # latency floor only
+    # ring all-reduce moves 2(tp-1)/tp of the buffer: more shards move
+    # a larger fraction (1.5x at tp=4 vs 1.0x at tp=2)
+    m2 = ServerModel(tp=2, mesh_shape=(1, 2))
+    big = 1e9
+    assert m.ici_collective_time(big) > m2.ici_collective_time(big)
+
+
+def test_ici_terms_enter_iteration_times():
+    base = ServerModel(tp=4)
+    mesh = ServerModel(tp=4, mesh_shape=(1, 4))
+    assert mesh.prefill_time(4096, 64) > base.prefill_time(4096, 64)
+    assert mesh.decode_time(32, 64) > base.decode_time(32, 64)
+    assert mesh.prefill_time_bucketed({8: 2048, 64: 2048}) > \
+        base.prefill_time_bucketed({8: 2048, 64: 2048})
+    # the LoRA psum term scales with rank, not d_model: bucketed charges
+    # each bucket at its own rank
+    lo = mesh.iteration_ici_time(4096, {8: 4096})
+    hi = mesh.iteration_ici_time(4096, {128: 4096})
+    assert lo < hi
+
+
+def test_sim_backend_mesh_shape_builds_sharded_server_model():
+    from repro.serving.backend import SimBackend
+    b = SimBackend(2, mesh_shape=(2, 4))
+    assert b.model.mesh_shape == (2, 4)
+    assert b.model.tp == 4 and b.model.tp_degree == 4
+    assert b.model.dp_degree == 2
+
+
+# -- sharded engine token parity (subprocess, 8 host devices) ------------
+
+PARITY_SCRIPT = r"""
+import time
+
+import jax
+
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_engine_mesh
+from repro.models import model as M
+from repro.serving import Request, ServingEngine
+
+cfg = get_smoke_config("llama-7b-paper")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+RANKS = {"a-r8": 8, "b-r64": 64}
+
+
+def outputs(eng):
+    return {r.req_id: tuple(r.output)
+            for r in eng.completed + eng.drain_completed()}
+
+
+def run(mesh, bank_mode, kern, decode_block=1):
+    # Full lifecycle on one engine: batched prefill, decode, a
+    # mid-flight adapter install (requests still co-batched), more
+    # traffic on the installed adapter, then an evict + post-evict
+    # rebuild traffic.
+    eng = ServingEngine(cfg, params, dict(RANKS), max_batch=4,
+                        max_len=40, bank_mode=bank_mode,
+                        lora_kernel=kern, decode_block=decode_block,
+                        mesh=mesh)
+    now = time.monotonic()
+    for i in range(4):
+        eng.submit(Request(i, ["a-r8", "b-r64"][i % 2],
+                           list(range(1, 9)), 5, arrival=now))
+    eng.step()            # prefill admission
+    eng.step()            # some decode progress, slots still live
+    assert eng.install_adapter("c-r16", 16)     # mid-flight rebuild
+    eng.submit(Request(10, "c-r16", list(range(2, 10)), 5, arrival=now))
+    eng.run_until_drained()
+    assert eng.evict_adapter("c-r16")           # mid-run shrink
+    eng.submit(Request(11, "b-r64", list(range(3, 11)), 5, arrival=now))
+    eng.run_until_drained()
+    return outputs(eng)
+
+
+mesh = make_engine_mesh(2, 4)
+cases = [("padded", "einsum", 1), ("bucketed", "einsum", 1),
+         ("bucketed", "einsum", 4), ("bucketed", "sgmv", 1)]
+for bank_mode, kern, k in cases:
+    ref = run(None, bank_mode, kern, k)
+    out = run(mesh, bank_mode, kern, k)
+    assert ref == out, (bank_mode, kern, k, ref, out)
+    print(f"parity ok: {bank_mode}/{kern}/k={k} n={len(ref)}")
+print("PARITY_OK")
+"""
+
+
+def test_mesh_sharded_engine_token_parity():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", PARITY_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=1800)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "PARITY_OK" in proc.stdout
