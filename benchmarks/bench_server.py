@@ -1,0 +1,167 @@
+"""Streaming-gateway load bench: open-loop Poisson HTTP traffic against
+an in-process ``ServeGateway`` over ``SimBackend``.
+
+Client threads fire ``POST /v1/completions`` (SSE) at exponential
+inter-arrival gaps — open-loop, so admission and queueing delays do not
+throttle the offered load — and measure *client-side* TTFT (request
+send to first SSE token frame) and end-to-end stream duration. Rows
+report P50/P95 TTFT and aggregate streamed tokens/s per offered rate.
+"""
+from __future__ import annotations
+
+import asyncio
+import http.client
+import json
+import random
+import threading
+import time
+
+from repro.cluster import NetworkModel
+from repro.core import AdapterInfo
+from repro.serving import LoRAServeCluster, SimBackend
+from repro.server import ServeGateway
+
+from .common import emit
+
+
+def _percentile(xs, q):
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+class _Gateway:
+    """The gateway on its own event loop in a daemon thread."""
+
+    def __init__(self, cluster):
+        self.gw = ServeGateway(cluster, port=0)
+        self._ready = threading.Event()
+        self.loop = None
+        self.thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        self.loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(self.loop)
+
+        async def main():
+            await self.gw.start()
+            self._ready.set()
+            await self.gw.serve_until_stopped()
+
+        try:
+            self.loop.run_until_complete(main())
+        finally:
+            self.loop.close()
+
+    def start(self):
+        self.thread.start()
+        if not self._ready.wait(60):
+            raise RuntimeError("gateway failed to start")
+        return self.gw.port
+
+    def stop(self):
+        self.loop.call_soon_threadsafe(self.gw.begin_shutdown)
+        self.thread.join(300)
+
+
+def _one_stream(port, adapter_id, max_tokens, out):
+    """One SSE request; appends (ttft_s, n_tokens, duration_s)."""
+    t0 = time.perf_counter()
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=300)
+    try:
+        conn.request("POST", "/v1/completions",
+                     json.dumps({"adapter_id": adapter_id,
+                                 "prompt_len": 16,
+                                 "max_tokens": max_tokens}),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        if resp.status != 200:
+            resp.read()
+            return
+        ttft, n = None, 0
+        while True:
+            line = resp.fp.readline()
+            if not line:
+                break
+            line = line.decode("utf-8").strip()
+            if line == "data: [DONE]":
+                break
+            if not line.startswith("data: "):
+                continue
+            toks = json.loads(line[6:]).get("tokens") or []
+            if toks and ttft is None:
+                ttft = time.perf_counter() - t0
+            n += len(toks)
+        if ttft is not None:
+            out.append((ttft, n, time.perf_counter() - t0))
+    finally:
+        conn.close()
+
+
+def _load_round(port, adapters, rate_rps, n_requests, max_tokens,
+                seed):
+    """Open-loop Poisson arrivals: launch each request on its own
+    thread at its scheduled instant regardless of completions."""
+    rng = random.Random(seed)
+    samples = []             # thread-safe via GIL-atomic list.append
+    threads = []
+    t_start = time.perf_counter()
+    next_at = 0.0
+    for i in range(n_requests):
+        next_at += rng.expovariate(rate_rps)
+        delay = t_start + next_at - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        t = threading.Thread(
+            target=_one_stream,
+            args=(port, adapters[i % len(adapters)].adapter_id,
+                  max_tokens, samples),
+            daemon=True)
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join(300)
+    wall = time.perf_counter() - t_start
+    return samples, wall
+
+
+def run(fast: bool = True):
+    n_requests = 16 if fast else 64
+    max_tokens = 20 if fast else 40
+    rates = [20.0, 60.0] if fast else [20.0, 60.0, 120.0]
+    rows = []
+    for rate in rates:
+        adapters = [AdapterInfo(f"b{i}-r{[8, 16, 32, 64][i % 4]}",
+                                [8, 16, 32, 64][i % 4],
+                                nbytes=8 << 20) for i in range(4)]
+        backend = SimBackend(2, adapter_nbytes={
+            a.adapter_id: a.nbytes for a in adapters})
+        cluster = LoRAServeCluster(backend, adapters,
+                                   network=NetworkModel(),
+                                   rebalance_period=1e9, seed=0)
+        gw = _Gateway(cluster)
+        port = gw.start()
+        try:
+            samples, wall = _load_round(port, adapters, rate,
+                                        n_requests, max_tokens, seed=1)
+        finally:
+            gw.stop()
+        done = len(samples)
+        tokens = sum(n for _, n, _ in samples)
+        ttfts = [t for t, _, _ in samples]
+        tok_rate = tokens / wall if wall > 0 else 0.0
+        rows.append(emit(
+            f"server/poisson_rate{rate:g}",
+            _percentile(ttfts, 0.50) * 1e6 if ttfts else 0.0,
+            f"p50_ttft_ms={_percentile(ttfts, 0.50) * 1e3:.1f} "
+            f"p95_ttft_ms={_percentile(ttfts, 0.95) * 1e3:.1f} "
+            f"streamed_tok_per_s={tok_rate:.0f} "
+            f"completed={done}/{n_requests} "
+            f"streamed_tokens={tokens}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import fmt_rows
+    print(fmt_rows(run(True)))

@@ -14,7 +14,7 @@ import time
 from . import (bench_ablation, bench_autoscale, bench_interference,
                bench_kernels, bench_mesh, bench_placement,
                bench_rank_skew, bench_roofline, bench_scalability,
-               bench_transfer, bench_workloads)
+               bench_server, bench_transfer, bench_workloads)
 from .common import fmt_rows
 
 BENCHES = {
@@ -29,6 +29,7 @@ BENCHES = {
     "workloads": bench_workloads.run,
     "scalability": bench_scalability.run,
     "rank_skew": bench_rank_skew.run,
+    "server": bench_server.run,
     "roofline": lambda fast: bench_roofline.run(),
     "ablation": bench_ablation.run,
 }

@@ -1,0 +1,125 @@
+"""Streaming-gateway client walkthrough (stdlib only).
+
+Registers a fresh adapter over HTTP, streams a completion on it
+token-by-token (SSE), prints the live adapter table, then unregisters
+it — the full runtime adapter lifecycle against a live gateway.
+
+Against an already-running gateway:
+
+  PYTHONPATH=src python -m repro.launch.server --backend sim --port 8080 &
+  PYTHONPATH=src python examples/client_stream.py --port 8080
+
+Or self-contained (spawns a sim-backend gateway, runs the flow, drains
+it with SIGTERM) — doubling as a smoke test:
+
+  PYTHONPATH=src python examples/client_stream.py --spawn
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+
+def request(host, port, method, path, body=None):
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request(method, path,
+                 json.dumps(body) if body is not None else None,
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    data = resp.read()
+    conn.close()
+    return resp.status, json.loads(data) if data else {}
+
+
+def stream_completion(host, port, payload):
+    """POST /v1/completions and yield each SSE data frame as a dict."""
+    conn = http.client.HTTPConnection(host, port, timeout=60)
+    conn.request("POST", "/v1/completions", json.dumps(payload),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    assert resp.status == 200, (resp.status, resp.read())
+    while True:
+        line = resp.fp.readline()
+        if not line:
+            break
+        line = line.decode("utf-8").strip()
+        if not line.startswith("data: "):
+            continue
+        data = line[len("data: "):]
+        if data == "[DONE]":
+            break
+        yield json.loads(data)
+    conn.close()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--spawn", action="store_true",
+                    help="spawn a sim-backend gateway, run the flow, "
+                         "drain it with SIGTERM")
+    args = ap.parse_args()
+
+    proc = None
+    host, port = args.host, args.port
+    if args.spawn:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.server",
+             "--backend", "sim", "--port", "0"],
+            stdout=subprocess.PIPE, text=True, env=env)
+        line = proc.stdout.readline().strip()   # "listening on host:port"
+        host, port = line.rsplit(" ", 1)[-1].rsplit(":", 1)
+        port = int(port)
+        print(f"spawned gateway on {host}:{port}")
+
+    try:
+        status, health = request(host, port, "GET", "/healthz")
+        print(f"healthz: {status} {health}")
+
+        status, created = request(host, port, "POST", "/v1/adapters",
+                                  {"adapter_id": "demo-adapter",
+                                   "rank": 16})
+        print(f"registered: {status} {created}")
+        assert status == 201, created
+
+        total = []
+        for chunk in stream_completion(host, port, {
+                "adapter_id": "demo-adapter", "prompt_len": 16,
+                "max_tokens": 8}):
+            if chunk.get("finish_reason"):
+                print(f"  finish: usage={chunk['usage']}")
+            elif chunk.get("tokens"):
+                total.extend(chunk["tokens"])
+                print(f"  chunk @{chunk['index']}: {chunk['tokens']}")
+        print(f"streamed {len(total)} tokens")
+        assert len(total) == 8, total
+
+        status, table = request(host, port, "GET", "/v1/adapters")
+        print(f"adapter table: {len(table['adapters'])} adapters")
+
+        status, gone = request(host, port, "DELETE",
+                               "/v1/adapters/demo-adapter")
+        print(f"unregistered: {status} {gone}")
+        assert status == 202, gone
+        print("client flow OK")
+    finally:
+        if proc is not None:
+            proc.send_signal(signal.SIGTERM)
+            try:
+                proc.wait(timeout=30)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+            print(f"gateway exited with {proc.returncode}")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,13 @@ Rules (ids used in ``# analysis: ignore[rule]`` markers):
 * ``side-effect-cond`` — statement-position conditional expression
   (``f(x) if c else None``): side effects hidden inside an expression
   statement; write the ``if`` out.
+* ``async-blocking`` — a known blocking call (``time.sleep``,
+  ``subprocess.*``, ``requests.*``, ``urllib.request.urlopen``,
+  ``socket.create_connection``, ``os.system``) directly inside an
+  ``async def``: it stalls the event loop — and in the serving gateway
+  the cluster pump, every open SSE stream, and all other handlers ride
+  that one loop. Use the ``await``-able equivalent (e.g.
+  ``asyncio.sleep``) or push the work to a thread.
 
 The traced-region analysis is heuristic but deliberately so: a
 function is "traced" if it is decorated with ``jax.jit`` (directly or
@@ -59,6 +66,21 @@ RULES: Dict[str, str] = {
     "shared-mutable-dataclass": "dataclass field defaulting to a shared "
                                 "mutable object",
     "side-effect-cond": "statement-position conditional expression",
+    "async-blocking": "blocking call inside an async function stalls "
+                      "the event loop",
+}
+
+# dotted names whose call blocks the thread — poison inside `async def`
+_ASYNC_BLOCKING_CALLS = {
+    ("time", "sleep"),
+    ("os", "system"),
+    ("subprocess", "run"), ("subprocess", "call"),
+    ("subprocess", "check_call"), ("subprocess", "check_output"),
+    ("socket", "create_connection"), ("socket", "getaddrinfo"),
+    ("urllib", "request", "urlopen"),
+    ("requests", "get"), ("requests", "post"), ("requests", "put"),
+    ("requests", "delete"), ("requests", "head"),
+    ("requests", "request"),
 }
 
 _MUTABLE_CALLS = {"list", "dict", "set", "defaultdict", "OrderedDict",
@@ -319,10 +341,25 @@ class Linter(ast.NodeVisitor):
                        "a side effect; write the `if` statement out")
         self.generic_visit(node)
 
+    def _in_async(self) -> bool:
+        """Directly inside an ``async def`` body (a sync ``def`` nested
+        in a coroutine runs wherever it is *called*, so only the
+        innermost frame decides)."""
+        return bool(self._fn_stack) and isinstance(
+            self._fn_stack[-1]["node"], ast.AsyncFunctionDef)
+
     def visit_Call(self, node: ast.Call):
         fn = _dotted(node.func)
         in_traced = self._in_traced()
         hot = in_traced or self._in_decode_path()
+
+        if fn in _ASYNC_BLOCKING_CALLS and self._in_async():
+            name = self._fn_stack[-1]["node"].name
+            self._emit(node, "async-blocking",
+                       f"{'.'.join(fn)}() inside `async def {name}` "
+                       f"blocks the event loop (pump, SSE streams, and "
+                       f"all handlers share it); use the awaitable "
+                       f"equivalent or run_in_executor")
 
         # .item() on anything, in any hot region
         if isinstance(node.func, ast.Attribute) and \

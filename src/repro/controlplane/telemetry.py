@@ -131,3 +131,28 @@ class TelemetryHub:
 
     def sample_count(self, now: float) -> int:
         return self._ttft.count(now)
+
+    def snapshot(self, now: float) -> dict:
+        """One consistent windowed view at ``now`` — what a live
+        ``/metrics`` scrape renders. Percentile entries are ``None``
+        (not NaN, not inf) while the window is empty so renderers can
+        skip them cleanly."""
+        return {
+            "now": now,
+            "window": self.window,
+            "arrivals": self.arrivals,
+            "completions": self.completions,
+            "timeouts": self.timeouts,
+            "samples": self.sample_count(now),
+            "ttft_p50": self.ttft_percentile(50, now),
+            "ttft_p95": self.ttft_percentile(95, now),
+            "tbt_p50": self.tbt_percentile(50, now),
+            "tbt_p95": self.tbt_percentile(95, now),
+            "adapter_token_rates": self.adapter_rates(now),
+            "adapter_request_rates": {
+                aid: w.rate(now)
+                for aid, w in self._adapter_requests.items()},
+            "server_token_rates": {
+                sid: w.rate(now)
+                for sid, w in self._server_tokens.items()},
+        }

@@ -48,6 +48,9 @@ class ClusterOrchestrator:
         # placement is solved over active-minus-draining only
         self.active: List[int] = list(range(n_servers))
         self.draining: set = set()
+        # adapter lifecycle: ids mid loss-free retire — routing entries
+        # already gone, copies leave once the host signals quiescence
+        self.retiring: set = set()
         ctx = PlacementContext(
             n_servers=n_servers, adapters=adapters,
             demand_tps={a.adapter_id: 1.0 for a in adapters},
@@ -128,6 +131,55 @@ class ClusterOrchestrator:
             for p in plans:
                 self.store.finish(p)
         return plans
+
+    # -- adapter lifecycle (runtime register / loss-free retire) -----------
+    def register_adapter(self, info: AdapterInfo, now: float = 0.0,
+                         server: Optional[int] = None) -> int:
+        """Make a new adapter servable mid-run. Its first copy lands on
+        ``server`` (default: the placeable server holding the fewest
+        adapters) with a single full-phi route; the next
+        ``end_of_timestep`` folds it into the demand-driven placement
+        like any other adapter. Returns the chosen server id."""
+        aid = info.adapter_id
+        if aid in self.meta:
+            raise ValueError(f"adapter {aid!r} already registered")
+        if server is None:
+            server = min(self.placeable_servers(),
+                         key=lambda s: (self.store.server_adapter_count(s),
+                                        s))
+        elif server not in self.placeable_servers():
+            raise RuntimeError(f"register of {aid!r} on non-placeable "
+                               f"server {server}")
+        self.adapters.append(info)
+        self.meta[aid] = info
+        self.placement[aid] = {server: 1.0}
+        self.router.update(self.placement)
+        self.store.register_adapter(info, server)
+        return server
+
+    def begin_retire_adapter(self, adapter_id: str) -> None:
+        """Start a loss-free adapter retire: routing stops now (new
+        routes raise ``UnknownAdapterError``), placement forgets it, the
+        store keeps its copies readable until ``finish_retire_adapter``.
+        In-flight requests referencing it are unaffected."""
+        if adapter_id not in self.meta:
+            raise KeyError(adapter_id)
+        self.retiring.add(adapter_id)
+        self.adapters[:] = [a for a in self.adapters
+                            if a.adapter_id != adapter_id]
+        self.meta.pop(adapter_id, None)
+        self.placement.pop(adapter_id, None)
+        self.router.remove_adapter(adapter_id)
+        # popping `desired` freezes GC for this adapter: its copies
+        # survive (readable by in-flight work) until deregistration
+        self.store.desired.pop(adapter_id, None)
+        self._window_tokens.pop(adapter_id, None)
+
+    def finish_retire_adapter(self, adapter_id: str) -> None:
+        """Complete a retire once the host observes quiescence (no live
+        requests, no transfers): purge every copy from every tier."""
+        self.store.deregister_adapter(adapter_id)
+        self.retiring.discard(adapter_id)
 
     # -- fleet lifecycle (controlplane scale-up / drain / retire) ----------
     def add_server(self, now: float = 0.0) -> int:

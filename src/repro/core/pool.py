@@ -146,6 +146,44 @@ class AdapterStore:
         return sum(1 for p in self._inflight.values()
                    if p.src_server == server_id)
 
+    # -- adapter lifecycle (runtime register / deregister) -----------------
+    def register_adapter(self, info: AdapterInfo, server_id: int) -> None:
+        """Install a newly-registered adapter's first copy directly in
+        ``server_id``'s HBM tier (the registration upload, not a fetch —
+        the fetch counters stay miss-driven). The caller has already
+        placed it there."""
+        aid = info.adapter_id
+        if aid in self.meta:
+            raise ValueError(f"adapter {aid!r} already registered")
+        if server_id in self.retired:
+            raise RuntimeError(f"register of {aid!r} on retired "
+                               f"server {server_id}")
+        if server_id in self.draining:
+            raise RuntimeError(f"register of {aid!r} on draining "
+                               f"server {server_id}")
+        self.meta[aid] = info
+        self.index[aid] = {server_id}
+        self.local[server_id].add(aid)
+        self.desired.setdefault(aid, set()).add(server_id)
+        self._debug_check()
+
+    def deregister_adapter(self, adapter_id: str) -> None:
+        """Remove every copy of a retired adapter from every tier. The
+        caller guarantees quiescence (no live requests, no transfers in
+        flight); loud otherwise — dropping an adapter mid-transfer would
+        strand its bytes on a link."""
+        if adapter_id not in self.meta:
+            raise KeyError(adapter_id)
+        if self.inflight_count(adapter_id):
+            raise RuntimeError(f"deregister of {adapter_id!r} with "
+                               f"transfers in flight")
+        for sid in range(self.n_servers):
+            self.local[sid].discard(adapter_id)
+            self.host_cache[sid].pop(adapter_id, None)
+        self.index.pop(adapter_id, None)
+        self.desired.pop(adapter_id, None)
+        self.meta.pop(adapter_id)
+
     # -- fleet lifecycle (controlplane scale-up / drain / retire) ---------
     def add_server(self) -> int:
         """Provision one empty server; returns its (stable, new) id."""

@@ -56,6 +56,12 @@ class RoutingTable:
             table[aid] = [(sid, phi / tot) for sid, phi in items]
         self._table = table
 
+    def remove_adapter(self, adapter_id: str) -> None:
+        """Drop an adapter's routing entry (runtime deregister): every
+        subsequent route for it raises ``UnknownAdapterError``. No-op if
+        it was never routed."""
+        self._table.pop(adapter_id, None)
+
     def block_server(self, server_id: int) -> None:
         """Retire ``server_id`` from routing: strip it from every entry
         (renormalizing phi over the survivors) and refuse it in all

@@ -104,6 +104,16 @@ def main():
     ap.add_argument("--max-servers", type=int, default=4)
     ap.add_argument("--tick-period", type=float, default=1.0,
                     help="controller tick (seconds)")
+    ap.add_argument("--serve", default=None, metavar="HOST:PORT",
+                    help="instead of replaying a trace, serve the "
+                         "cluster over the streaming HTTP gateway "
+                         "(OpenAI-style /v1/completions with SSE, "
+                         "adapter lifecycle routes, /metrics) until "
+                         "SIGTERM; port 0 picks an ephemeral port")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="gateway: per-tenant admission rate (req/s)")
+    ap.add_argument("--max-inflight", type=int, default=None,
+                    help="gateway: per-tenant concurrent-request cap")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--duration", type=float, default=6.0,
@@ -146,6 +156,19 @@ def main():
         rebalance_period=args.rebalance_period, seed=args.seed,
         access_mode=args.access_mode, prefetch=args.prefetch,
         controller=controller)
+    if args.serve:
+        from .server import run_gateway
+        host, _, port = args.serve.rpartition(":")
+        report = run_gateway(cluster, host or "127.0.0.1", int(port),
+                             rate=args.rate,
+                             max_inflight=args.max_inflight)
+        print(f"served={report.completed()} "
+              f"timed_out={report.timed_out} "
+              f"registered={report.registered} "
+              f"unregistered={report.unregistered}")
+        print("gateway drained OK")
+        return
+
     trace = build_trace(adapters, cfg, args.requests, args.prompt_len,
                         args.max_new, args.duration, args.seed)
     report = cluster.run(trace)

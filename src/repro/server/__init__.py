@@ -1,0 +1,10 @@
+"""Streaming serving surface: asyncio HTTP gateway over the
+incremental ``LoRAServeCluster`` API (``repro.server.gateway``), with
+minimal HTTP/1.1 + SSE framing (``http``), per-tenant admission control
+(``admission``), and Prometheus text exposition (``prom``)."""
+from .admission import AdmissionController, TokenBucket
+from .gateway import ServeGateway
+from .prom import render_metrics
+
+__all__ = ["AdmissionController", "TokenBucket", "ServeGateway",
+           "render_metrics"]

@@ -1,5 +1,6 @@
 from .backend import EngineBackend, ServingBackend, SimBackend
-from .cluster import ClusterReport, LoRAServeCluster, ServeResult
+from .cluster import (ClusterEvent, ClusterReport, LoRAServeCluster,
+                      ServeResult)
 from .engine import ServingEngine
 from .metrics import MetricsCollector, percentile
 from .request import Phase, Request, ServeRequest
@@ -7,7 +8,7 @@ from .scheduler import replay
 from .paging import OutOfPages, UnifiedPagePool
 
 __all__ = ["EngineBackend", "ServingBackend", "SimBackend",
-           "ClusterReport", "LoRAServeCluster", "ServeResult",
-           "ServingEngine", "MetricsCollector", "percentile",
-           "Phase", "Request", "ServeRequest", "replay",
+           "ClusterEvent", "ClusterReport", "LoRAServeCluster",
+           "ServeResult", "ServingEngine", "MetricsCollector",
+           "percentile", "Phase", "Request", "ServeRequest", "replay",
            "OutOfPages", "UnifiedPagePool"]

@@ -57,6 +57,12 @@ class ServingBackend(Protocol):
 
     def drain_timed_out(self) -> List[ServeRequest]: ...
 
+    def live_requests(self) -> List[ServeRequest]:
+        """Every request currently queued or running (not yet drained).
+        Feeds per-token streaming (watermark diffs between steps) and
+        adapter-retire quiescence checks."""
+        ...
+
     def pending(self) -> int: ...
 
     def server_load(self, server_id: int, now: float) -> float: ...
@@ -183,6 +189,9 @@ class SimBackend:
     def drain_timed_out(self) -> List[ServeRequest]:
         out, self._timed_out = self._timed_out, []
         return out
+
+    def live_requests(self) -> List[ServeRequest]:
+        return list(self._inflight)
 
     def pending(self) -> int:
         return len(self._inflight)
@@ -357,6 +366,15 @@ class EngineBackend:
 
     def drain_timed_out(self) -> List[ServeRequest]:
         out, self._timed_out = self._timed_out, []
+        return out
+
+    def live_requests(self) -> List[ServeRequest]:
+        out: List[ServeRequest] = []
+        for eng in self.engines:
+            if eng is None:
+                continue
+            out.extend(eng.queue)
+            out.extend(r for r in eng.slots if r is not None)
         return out
 
     def pending(self) -> int:

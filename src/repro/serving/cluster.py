@@ -17,24 +17,40 @@ shared clock:
   adapters are evicted from server banks, subsequent requests follow
   the updated phi, and with ``prefetch=True`` newly-placed copies start
   warming immediately instead of migrating lazily on first hit;
-* the run loop polls the store each tick so fetch completions install
+* the loop polls the store each tick so fetch completions install
   copies, promote remote-read serves, and push prefetched adapters into
   backend banks;
 * completions stream back as ``ServeResult`` records through one
   ``MetricsCollector`` regardless of backend.
 
-This is the unified serving API the launcher, examples, and benchmarks
-build on.
+The cluster API is **incremental**: requests arrive one at a time via
+``submit(request)``, the loop body is ``poll(now)`` (store completions,
+due rebalances/controller ticks, one backend step, completion/timeout/
+token events out), and ``drain()`` finishes whatever is in flight.
+``run(trace)`` — the batch replay every benchmark uses — is implemented
+on top of exactly those three calls, so a live gateway
+(``repro.server``) and a trace replay exercise the same control plane.
+
+Adapters have a runtime lifecycle too: ``register_adapter`` makes a new
+adapter servable mid-run (placed on the emptiest server, folded into
+subsequent rebalances), and ``unregister_adapter`` starts a loss-free
+retire — routing stops immediately, in-flight requests finish, then the
+copies leave the banks and the store.
+
+This is the unified serving API the launcher, gateway, examples, and
+benchmarks build on.
 """
 from __future__ import annotations
 
 import copy
 import dataclasses
+import math
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core import ClusterOrchestrator
 from repro.core.request import ServeRequest
+from repro.core.routing import UnknownAdapterError
 from repro.core.types import AdapterInfo, Placement, servers_to_adapters
 
 from .backend import ServingBackend
@@ -56,6 +72,21 @@ class ServeResult:
     n_output: int
 
 
+@dataclasses.dataclass(frozen=True)
+class ClusterEvent:
+    """One observable outcome of a ``poll`` tick.
+
+    ``kind`` is ``"token"`` (``tokens`` holds the newly decoded token
+    ids; ``None`` entries for the simulated substrate, which models
+    token *counts*, not values), ``"finish"`` (request completed;
+    ``tokens`` carries any tokens not yet surfaced), or ``"timeout"``.
+    """
+    kind: str
+    req: ServeRequest
+    tokens: Tuple = ()
+    now: float = 0.0
+
+
 @dataclasses.dataclass
 class ClusterReport:
     results: List[ServeResult]
@@ -72,11 +103,15 @@ class ClusterReport:
     warmup: float = 0.0
     bank_mode: str = "padded"          # bank layout the backend ran with
     mesh_shape: Optional[tuple] = None  # (dp, tp) engine mesh, if sharded
+    in_progress: int = 0               # unfinished at snapshot time
     # adapter data-plane telemetry
     access_mode: str = "migrate"       # migrate | remote-read
     remote_reads: int = 0              # misses served via peer GDR reads
     prefetches: int = 0                # rebalance-driven proactive warms
     coalesced_fetches: int = 0         # duplicate fetches joined in flight
+    # adapter lifecycle (runtime register/unregister)
+    registered: int = 0
+    unregistered: int = 0
     # control-plane telemetry (controller runs only)
     scale_ups: int = 0
     drains: int = 0
@@ -94,13 +129,16 @@ class ClusterReport:
     def _ttfts(self) -> List[float]:
         return [r.ttft for r in self._eligible() if r.ttft is not None]
 
+    # percentile helpers are snapshot-safe: an empty or still-warming
+    # window returns NaN (not inf, not an exception) so a mid-flight
+    # /metrics scrape renders cleanly
     def p50_ttft(self) -> float:
         t = self._ttfts()
-        return percentile(t, 50) if t else float("inf")
+        return percentile(t, 50) if t else float("nan")
 
     def p95_ttft(self) -> float:
         t = self._ttfts()
-        return percentile(t, 95) if t else float("inf")
+        return percentile(t, 95) if t else float("nan")
 
     def mean_tbt(self) -> float:
         ts = [r.tbt for r in self._eligible() if r.tbt and r.tbt > 0]
@@ -117,7 +155,9 @@ class ClusterReport:
         return len(self.placements) > 1
 
     def meets_slo(self, slo_ttft: float) -> bool:
-        return self.timed_out == 0 and self.p95_ttft() <= slo_ttft
+        p95 = self.p95_ttft()
+        return self.timed_out == 0 and not math.isnan(p95) \
+            and p95 <= slo_ttft
 
     def slo_attainment(self, slo_ttft: float) -> float:
         """Fraction of eligible requests with TTFT inside the target;
@@ -132,7 +172,8 @@ class ClusterReport:
 
 
 class LoRAServeCluster:
-    """One-shot cluster run: construct, ``run(trace)``, read the report."""
+    """Incremental cluster serving: ``submit`` / ``poll`` / ``drain``,
+    with the one-shot batch ``run(trace)`` implemented on top."""
 
     def __init__(self, backend: ServingBackend,
                  adapters: List[AdapterInfo], *,
@@ -140,18 +181,21 @@ class LoRAServeCluster:
                  rebalance_period: float = 15.0, warmup: float = 0.0,
                  seed: int = 0, operating_points=None, server_model=None,
                  access_mode: str = "migrate", prefetch: bool = False,
-                 controller=None):
+                 controller=None, track_tokens: bool = False,
+                 telemetry_window: float = 30.0):
         if operating_points is None:
             from repro.cluster.costmodel import (ServerModel,
                                                  profile_operating_points)
+            server_model = server_model or ServerModel()
             operating_points = profile_operating_points(
-                server_model or ServerModel(), {a.rank for a in adapters})
+                server_model, {a.rank for a in adapters})
         self.backend = backend
         self.adapters = adapters
         self.meta = {a.adapter_id: a for a in adapters}
         self.rebalance_period = rebalance_period
         self.warmup = warmup
         self.access_mode = access_mode
+        self._server_model = server_model   # for runtime-registered ranks
         # closed-loop control plane (repro.controlplane): may rebalance
         # out of band, provision servers, and drain them mid-run
         self.controller = controller
@@ -167,6 +211,11 @@ class LoRAServeCluster:
             network=network, seed=seed, access_mode=access_mode,
             prefetch=prefetch, sync_store=False)
         self.metrics = MetricsCollector()
+        # always-on live telemetry window (the gateway's /metrics feed);
+        # lazy import keeps repro.serving importable without dragging
+        # the whole control plane in at module-import time
+        from repro.controlplane.telemetry import TelemetryHub
+        self.hub = TelemetryHub(window=telemetry_window)
         self.placements: List[Placement] = [
             copy.deepcopy(self.orch.placement)]
         self.rebalances = 0
@@ -174,15 +223,27 @@ class LoRAServeCluster:
         self.scale_ups = 0
         self.drains = 0
         self.retires = 0
+        self.registered = 0              # runtime adapter registrations
+        self.unregistered = 0            # completed retires
         self._provisioned_at: Dict[int, float] = {
             i: 0.0 for i in range(backend.n_servers)}
         self._retired_at: Dict[int, float] = {}
         self.per_server_counts = [0] * backend.n_servers
         self.routed: Dict[int, int] = {}       # req_id -> server
+        self._submitted: List[ServeRequest] = []
         self._finished: List[ServeRequest] = []
         self._timed_out: List[ServeRequest] = []
+        self._retiring: Set[str] = set()       # adapters mid-unregister
+        # per-token streaming: watermark of surfaced tokens per request
+        self.track_tokens = track_tokens
+        self._stream_pos: Dict[int, int] = {}
         self._ran = False
+        self._started = False
+        self._closed = False
+        self._now = 0.0
         self._last_reb = 0.0
+        self._next_reb = float("inf")
+        self._next_ctick = float("inf")
         self._end_time = 0.0
         self._seed_backend()
         # running peaks across rebalances (the store GCs lazily, so the
@@ -196,12 +257,64 @@ class LoRAServeCluster:
             self.backend.load_adapters(
                 sid, {aid: self.meta[aid].rank for aid in aids})
 
+    # -- incremental lifecycle -------------------------------------------
+    def start(self) -> None:
+        """Anchor the clocks and arm the periodic control loops. Called
+        implicitly by the first ``submit``/``poll``/``run``."""
+        if self._started:
+            return
+        self._started = True
+        self.backend.start()
+        self._wall0 = time.monotonic()
+        self._now = 0.0
+        self._last_reb = 0.0
+        self._next_reb = (self.rebalance_period
+                          if self.orch.policy.dynamic else float("inf"))
+        self._next_ctick = (self.controller.config.tick_period
+                            if self.controller is not None
+                            else float("inf"))
+
+    def clock(self) -> float:
+        """Current time on the cluster clock: the backend's wall clock
+        when it has one, otherwise wall seconds since ``start()`` (a
+        virtual backend driven live advances in real time)."""
+        if not self._started:
+            return 0.0
+        if self.backend.realtime:
+            return self.backend.wall_now()
+        return time.monotonic() - self._wall0
+
+    def pending(self) -> int:
+        return self.backend.pending()
+
+    def idle(self) -> bool:
+        """No requests in flight, no drains or adapter retires pending."""
+        return (self.backend.pending() == 0 and not self.orch.draining
+                and not self._retiring)
+
     # -- request path (Fig 11 steps 1-4) --------------------------------
+    def submit(self, req: ServeRequest,
+               now: Optional[float] = None) -> int:
+        """Admit one request: phi-route it, plan its adapter's data
+        path, and hand it to the backend. Returns the chosen server.
+        Raises ``UnknownAdapterError`` for unregistered (or retiring)
+        adapters."""
+        self.start()
+        if now is None:
+            now = self.clock()
+        self._dispatch(req, now)
+        self._submitted.append(req)
+        return self.routed[req.req_id]
+
     def _dispatch(self, req: ServeRequest, now: float) -> None:
         aid = req.adapter_id
         if req.rank == 0 and aid in self.meta:
             req.rank = self.meta[aid].rank
+        if aid in self._retiring:
+            raise UnknownAdapterError(aid)
         if self.orch.policy.replicate_all:
+            if aid not in self.meta:
+                raise UnknownAdapterError(aid)
             sid = min(self.orch.placeable_servers(),
                       key=lambda i: self.backend.server_load(i, now))
             req.fetch_latency = 0.0
@@ -220,6 +333,8 @@ class LoRAServeCluster:
         self.backend.submit(sid, req, now)
         self.per_server_counts[sid] += 1
         self.routed[req.req_id] = sid
+        self.hub.observe_arrival(aid, sid,
+                                 req.prompt_len + req.output_len, now)
         if self.controller is not None:
             self.controller.observe_arrival(
                 aid, sid, req.prompt_len + req.output_len, now)
@@ -238,6 +353,102 @@ class LoRAServeCluster:
                     plan.dest, {aid: self.meta[aid].rank})
             self.backend.promote_adapter(plan.dest, aid)
 
+    # -- runtime adapter lifecycle ----------------------------------------
+    def register_adapter(self, info: AdapterInfo,
+                         now: Optional[float] = None) -> int:
+        """Make a new adapter servable mid-run: place it on the
+        emptiest live server, seed the store/routing entries, and load
+        it into that server's bank. Subsequent rebalances fold it into
+        the demand-driven placement. Returns the initial server id."""
+        if now is None:
+            now = self._now
+        if info.adapter_id in self.meta:
+            raise ValueError(f"adapter {info.adapter_id!r} is already "
+                             f"registered")
+        if info.rank not in self.orch.operating_points:
+            from repro.cluster.costmodel import (ServerModel,
+                                                 profile_operating_points)
+            pts = profile_operating_points(
+                self._server_model or ServerModel(), {info.rank})
+            self.orch.operating_points.update(pts)
+            if self.controller is not None \
+                    and self.controller.operating_points is not None:
+                self.controller.operating_points.update(pts)
+        sid = self.orch.register_adapter(info, now=now)
+        self.meta[info.adapter_id] = info
+        self.backend.load_adapters(sid, {info.adapter_id: info.rank})
+        if self.controller is not None:
+            self.controller.adapter_ranks[info.adapter_id] = info.rank
+        self._sync_banks(self.orch.placement)   # records the new entry
+        self.registered += 1
+        return sid
+
+    def unregister_adapter(self, adapter_id: str,
+                           now: Optional[float] = None) -> None:
+        """Start a loss-free adapter retire: routing stops immediately
+        (new requests raise ``UnknownAdapterError``), in-flight requests
+        run to completion, then ``poll`` evicts the copies from backend
+        banks and purges the store. Raises ``UnknownAdapterError`` for
+        adapters that aren't registered (or are already retiring)."""
+        if adapter_id not in self.meta or adapter_id in self._retiring:
+            raise UnknownAdapterError(adapter_id)
+        if now is None:
+            now = self._now
+        self.orch.begin_retire_adapter(adapter_id)
+        self._retiring.add(adapter_id)
+        # idle adapters leave at once; busy ones on a later poll
+        self._finish_retiring(now)
+
+    def adapter_entries(self) -> List[dict]:
+        """Live adapter table (the gateway's ``GET /v1/adapters``):
+        rank, phi-weighted placement, per-server tier residency, and
+        whether a loss-free retire is in progress."""
+        store = self.orch.store
+        out = []
+        for aid in sorted(self.meta):
+            info = self.meta[aid]
+            entry = self.orch.placement.get(aid, {})
+            servers = {}
+            for sid in sorted(set(entry) | store.index.get(aid, set())):
+                servers[sid] = {
+                    "phi": round(entry.get(sid, 0.0), 6),
+                    "tier": store.tier(sid, aid),
+                }
+            out.append({
+                "adapter_id": aid,
+                "rank": info.rank,
+                "nbytes": info.nbytes,
+                "servers": servers,
+                "draining": aid in self._retiring,
+            })
+        return out
+
+    def _finish_retiring(self, now: float) -> None:
+        """Complete retires whose adapters have gone quiet: no live
+        requests reference them and no store transfer is moving them."""
+        if not self._retiring:
+            return
+        live = None
+        for aid in sorted(self._retiring):
+            if self.orch.store.inflight_count(aid):
+                continue
+            if live is None:
+                live = {r.adapter_id for r in self.backend.live_requests()}
+            if aid in live:
+                continue
+            for sid in range(self.backend.n_servers):
+                if sid in self._retired_at:
+                    continue
+                if aid in self.backend.hosted_adapters(sid):
+                    # may refuse (e.g. a server's last adapter keeps its
+                    # bank shape); the stale bank row is harmless and
+                    # the store/routing state below is authoritative
+                    self.backend.evict_adapter(sid, aid)
+            self.orch.finish_retire_adapter(aid)
+            self._retiring.discard(aid)
+            self.meta.pop(aid, None)
+            self.unregistered += 1
+
     # -- control path (Fig 11 steps 6-7), mid-flight --------------------
     def _sync_banks(self, placement: Placement) -> None:
         """Sync backend banks down to the placement (evictions only —
@@ -254,7 +465,7 @@ class LoRAServeCluster:
                 continue
             wanted = set(want.get(sid, []))
             for aid in list(self.backend.hosted_adapters(sid)):
-                if aid not in wanted:
+                if aid not in wanted and aid not in self._retiring:
                     self.backend.evict_adapter(sid, aid)
         self._max_adapters = max(self._max_adapters,
                                  self.orch.store.max_adapters_per_server())
@@ -314,7 +525,138 @@ class LoRAServeCluster:
                 self.backend.retire_server(a.server)
                 self._retired_at[a.server] = now
 
-    # -- run loop --------------------------------------------------------
+    # -- token surfacing ---------------------------------------------------
+    def _new_tokens(self, req: ServeRequest) -> Tuple:
+        """Tokens decoded since the last poll. Real-engine requests
+        surface actual token ids from ``req.output``; simulated ones
+        surface ``None`` placeholders (the sim models counts, not
+        values) at the same cadence."""
+        pos = self._stream_pos.get(req.req_id, 0)
+        if req.output:
+            cur = len(req.output)
+            toks = tuple(req.output[pos:cur])
+        else:
+            cur = req.decoded
+            toks = (None,) * max(0, cur - pos)
+        if cur > pos:
+            self._stream_pos[req.req_id] = cur
+        return toks
+
+    # -- the loop body ----------------------------------------------------
+    def poll(self, now: Optional[float] = None) -> List[ClusterEvent]:
+        """One control-loop tick at ``now``: complete due adapter
+        transfers, fire due rebalances and controller ticks, advance
+        every backend server once, and return what happened — finish
+        and timeout events always, per-token events when the cluster
+        was built with ``track_tokens=True``."""
+        self.start()
+        if now is None:
+            now = self.clock()
+        events: List[ClusterEvent] = []
+        ctrl = self.controller
+        self._poll_store(now)
+        if self.orch.policy.dynamic and now + 1e-12 >= self._next_reb:
+            self._rebalance(now - self._last_reb, now)
+            self._last_reb = now
+            self._next_reb = now + self.rebalance_period
+        if ctrl is not None and now + 1e-12 >= self._next_ctick:
+            self._control_tick(now)
+            self._next_ctick = now + ctrl.config.tick_period
+        self.backend.step(now)
+        if self.track_tokens:
+            for req in self.backend.live_requests():
+                toks = self._new_tokens(req)
+                if toks:
+                    events.append(ClusterEvent("token", req, toks, now))
+        for req in self.backend.drain_completed():
+            done_at = req.finish if req.finish >= 0 else now
+            self.metrics.record(req)
+            self.hub.observe_completion(req, done_at)
+            self._finished.append(req)
+            if ctrl is not None:
+                ctrl.observe_completion(req, done_at)
+            toks = self._new_tokens(req) if self.track_tokens else ()
+            self._stream_pos.pop(req.req_id, None)
+            events.append(ClusterEvent("finish", req, toks, now))
+        for req in self.backend.drain_timed_out():
+            self._timed_out.append(req)
+            self.hub.observe_timeout(now)
+            if ctrl is not None:
+                ctrl.observe_timeout(now)
+            self._stream_pos.pop(req.req_id, None)
+            events.append(ClusterEvent("timeout", req, (), now))
+        self._finish_retiring(now)
+        self._now = max(self._now, now)
+        self._end_time = max(self._end_time, self._now)
+        return events
+
+    def _next_time(self, now: float, arrivals_left: bool,
+                   next_arrival: Optional[float] = None
+                   ) -> Optional[float]:
+        """Earliest future instant anything can happen (virtual-clock
+        drivers jump to it); None when the cluster is eternally idle."""
+        cands = []
+        if next_arrival is not None:
+            cands.append(next_arrival)
+        t = self.backend.next_event_time(now)
+        if t is not None:
+            cands.append(t)
+        t = self.orch.store.next_event_time(now)
+        if t is not None:
+            cands.append(t)
+        if self.orch.policy.dynamic and (arrivals_left
+                                         or self.backend.pending()):
+            cands.append(self._next_reb)
+        if self.controller is not None and (arrivals_left
+                                            or self.backend.pending()
+                                            or self.orch.draining):
+            cands.append(self._next_ctick)
+        if not cands:
+            return None
+        return min(cands)
+
+    # -- drain ------------------------------------------------------------
+    def drain(self, max_steps: int = 10_000_000) -> List[ClusterEvent]:
+        """Finish everything in flight — queued requests, store
+        transfers, server drains, adapter retires — without admitting
+        new work. Returns every event observed on the way out."""
+        self.start()
+        events: List[ClusterEvent] = []
+        now = self._now
+        for _ in range(max_steps):
+            if self.backend.realtime:
+                now = self.backend.wall_now()
+            events.extend(self.poll(now))
+            if self.idle():
+                break
+            if self.backend.realtime:
+                time.sleep(0.001)
+            else:
+                nxt = self._next_time(now, arrivals_left=False)
+                if nxt is None:
+                    break
+                now = max(now, nxt)
+        # drain trailing transfers (warm fetches/prefetches still in
+        # flight when the last request finished) so the report's bank
+        # and remote-residency state is consistent
+        self._poll_store(float("inf"))
+        self._end_time = max(self._end_time, now)
+        return events
+
+    def close(self) -> None:
+        """Release backend execution resources (engine banks) after a
+        drain. The report must be snapshotted first — retired servers
+        report empty memory profiles."""
+        if self._closed:
+            return
+        self._closed = True
+        self._poll_store(float("inf"))
+        for sid in range(self.backend.n_servers):
+            if sid in self._retired_at:
+                continue
+            self.backend.retire_server(sid)
+
+    # -- batch replay (implemented on submit/poll) -------------------------
     def run(self, trace: List[ServeRequest], *,
             max_steps: int = 10_000_000) -> ClusterReport:
         if self._ran:
@@ -323,38 +665,15 @@ class LoRAServeCluster:
         self._ran = True
         trace = sorted(trace, key=lambda r: r.arrival)
         n = len(trace)
-        ctrl = self.controller
-        dynamic = self.orch.policy.dynamic
-        self.backend.start()
+        self.start()
         now = 0.0
-        self._last_reb = 0.0
-        next_reb = self.rebalance_period if dynamic else float("inf")
-        next_ctick = (ctrl.config.tick_period if ctrl is not None
-                      else float("inf"))
         i = 0
         for _ in range(max_steps):
             self._poll_store(now)
             while i < n and trace[i].arrival <= now + 1e-12:
-                self._dispatch(trace[i], now)
+                self.submit(trace[i], now)
                 i += 1
-            if dynamic and now + 1e-12 >= next_reb:
-                self._rebalance(now - self._last_reb, now)
-                self._last_reb = now
-                next_reb = now + self.rebalance_period
-            if ctrl is not None and now + 1e-12 >= next_ctick:
-                self._control_tick(now)
-                next_ctick = now + ctrl.config.tick_period
-            self.backend.step(now)
-            for req in self.backend.drain_completed():
-                self.metrics.record(req)
-                self._finished.append(req)
-                if ctrl is not None:
-                    ctrl.observe_completion(
-                        req, req.finish if req.finish >= 0 else now)
-            for req in self.backend.drain_timed_out():
-                self._timed_out.append(req)
-                if ctrl is not None:
-                    ctrl.observe_timeout(now)
+            self.poll(now)
             if i >= n and self.backend.pending() == 0 \
                     and not self.orch.draining:
                 break
@@ -364,34 +683,32 @@ class LoRAServeCluster:
                         trace[i].arrival - self.backend.wall_now(), 0.01)))
                 now = self.backend.wall_now()
             else:
-                cands = []
-                if i < n:
-                    cands.append(trace[i].arrival)
-                t = self.backend.next_event_time(now)
-                if t is not None:
-                    cands.append(t)
-                t = self.orch.store.next_event_time(now)
-                if t is not None:
-                    cands.append(t)
-                if dynamic and (i < n or self.backend.pending()):
-                    cands.append(next_reb)
-                if ctrl is not None and (i < n or self.backend.pending()
-                                         or self.orch.draining):
-                    cands.append(next_ctick)
-                if not cands:
+                nxt = self._next_time(
+                    now, i < n, trace[i].arrival if i < n else None)
+                if nxt is None:
                     break           # nothing can ever happen again
-                now = max(now, min(cands))
-        # drain trailing transfers (warm fetches/prefetches still in
-        # flight when the last request finished) so the report's bank
-        # and remote-residency state is consistent
+                now = max(now, nxt)
         self._poll_store(float("inf"))
         self._end_time = now
         return self._report(trace)
 
-    def _report(self, trace: List[ServeRequest]) -> ClusterReport:
+    # -- reporting ---------------------------------------------------------
+    def snapshot(self) -> ClusterReport:
+        """Mid-flight report over everything submitted so far —
+        unfinished requests appear with ``finished=False`` and none of
+        the percentile helpers raise on the partial window. This is
+        what feeds a live ``/metrics`` scrape; it does not require (or
+        wait for) the run to complete."""
+        return self._report(list(self._submitted))
+
+    def report(self) -> ClusterReport:
+        """Final report over every submitted request."""
+        return self._report(list(self._submitted))
+
+    def _report(self, reqs: List[ServeRequest]) -> ClusterReport:
         done_ids = {id(r) for r in self._finished}
         results = []
-        for r in trace:
+        for r in reqs:
             finished = id(r) in done_ids
             results.append(ServeResult(
                 req_id=r.req_id, adapter_id=r.adapter_id, rank=r.rank,
@@ -409,8 +726,9 @@ class LoRAServeCluster:
             max_adapters = max(self._max_adapters,
                                store.max_adapters_per_server())
             total_bytes = max(self._total_bytes, store.total_bytes())
+        end = max(self._end_time, self._now)
         gpu_seconds = sum(
-            self._retired_at.get(sid, self._end_time) - t0
+            self._retired_at.get(sid, end) - t0
             for sid, t0 in self._provisioned_at.items())
         return ClusterReport(
             results=results,
@@ -427,10 +745,13 @@ class LoRAServeCluster:
             warmup=self.warmup,
             bank_mode=getattr(self.backend, "bank_mode", "padded"),
             mesh_shape=getattr(self.backend, "mesh_shape", None),
+            in_progress=sum(1 for r in results if not r.finished),
             access_mode=self.access_mode,
             remote_reads=store.remote_reads,
             prefetches=store.prefetches,
             coalesced_fetches=store.coalesced,
+            registered=self.registered,
+            unregistered=self.unregistered,
             scale_ups=self.scale_ups,
             drains=self.drains,
             retires=self.retires,

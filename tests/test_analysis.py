@@ -178,6 +178,45 @@ def test_side_effect_cond_statement():
 # --------------------------------------------------------------------------
 
 
+def test_async_blocking_call_in_handler():
+    assert "async-blocking" in _rules("""
+        class Gateway:
+            async def _handle(self, req):
+                time.sleep(0.1)
+                return req
+        """)
+
+
+def test_async_blocking_subprocess_and_urlopen():
+    rules = _rules("""
+        async def fetch(url):
+            subprocess.run(["curl", url])
+            return urllib.request.urlopen(url)
+        """)
+    assert rules.count("async-blocking") == 2
+
+
+def test_sync_code_may_block_and_awaited_sleep_ok():
+    assert _rules("""
+        def warmup():
+            time.sleep(0.1)
+
+        async def pump(self):
+            await asyncio.sleep(0.1)
+        """) == []
+
+
+def test_nested_sync_fn_inside_async_not_flagged():
+    # the blocking call's *innermost* enclosing function is synchronous:
+    # it runs off-loop (e.g. via run_in_executor), so it may block
+    assert _rules("""
+        async def handler(req):
+            def worker():
+                time.sleep(1.0)
+            return worker
+        """) == []
+
+
 def test_suppression_same_line_and_line_above():
     assert _rules("""
         @jax.jit
