@@ -1,0 +1,169 @@
+"""Observability overhead + coverage — the flight-recorder tracing
+layer must be cheap enough to leave on.
+
+Replays a synthetic workload through the calibrated simulator with
+tracing on, then derives the tracing overhead from first principles:
+
+    overhead_frac = per-span record cost x span count / base run time
+
+where the per-span cost is calibrated with a tight in-process loop
+(``Tracer.record`` with the drift listener attached — exactly the
+tracing-on hot path) and the base time is best-of-N tracing-off runs.
+The direct A/B throughput delta is also reported
+(``overhead_frac_e2e``) but only as a secondary signal: the tracing
+cost is tens of milliseconds against a ~1.5 s run, well inside
+machine-load jitter, so the derived number is the acceptance gate
+(< 3% tokens/s).
+
+Also reported:
+
+* per-phase decomposition coverage — the fraction of finished requests
+  whose fetch/queue/prefill/decode children telescope exactly to the
+  root request span, plus each phase's share of total request time;
+* cost-model drift per phase (bias ~0 on the sim substrate: modeled
+  time IS sim time, so nonzero means the span pairing broke).
+
+A sample Perfetto trace is written next to the CSV
+(``experiments/bench/obs_sample.perfetto.json``) for loading in
+ui.perfetto.dev.
+"""
+from __future__ import annotations
+
+import copy
+import os
+import time
+
+from repro.cluster import ClusterSimulator
+from repro.obs import (REQUEST_PHASES, CostModelDrift, EventClock, Tracer,
+                       write_perfetto)
+from repro.traces import make_adapters, synth_trace
+
+from .common import emit, timed
+
+OUTDIR = "experiments/bench"
+
+
+def _tokens(res) -> int:
+    return sum(r.prompt_len + r.output_len for r in res.requests
+               if r.finish >= 0)
+
+
+def _calibrate_span_cost(n: int = 20000, batches: int = 5) -> float:
+    """Seconds per ``Tracer.record`` call with the drift listener
+    attached — the exact per-span cost the simulator pays when tracing
+    is on. Tight-loop, min over batches: stable where an end-to-end
+    A/B diff of the same quantity drowns in scheduler noise."""
+    best = float("inf")
+    for _ in range(batches):
+        tr = Tracer(clock=EventClock())
+        tr.add_listener(CostModelDrift().observe)
+        attrs = {"predicted": 0.01, "batch": 8, "steps": 1,
+                 "iters": 1, "bank_mode": "padded"}
+        t0 = time.perf_counter()
+        for i in range(n):
+            tr.record("decode", 0.0, 0.01, cat="iteration",
+                      track="server:0", attrs=attrs)
+        best = min(best, (time.perf_counter() - t0) / n)
+    return best
+
+
+def run(fast: bool = True):
+    rows = []
+    n_servers = 4
+    n_adapters = 24 if fast else 48
+    rps = 30.0 if fast else 60.0
+    duration = 40.0 if fast else 120.0
+
+    adapters = make_adapters(n_adapters, seed=11)
+    trace = synth_trace(adapters, rps=rps, duration=duration,
+                        prompt_len=256, output_len=64, seed=11)
+
+    def replay(tracer=None):
+        sim = ClusterSimulator(n_servers, adapters, policy="loraserve",
+                               seed=11, timeout=120.0,
+                               rebalance_period=10.0, tracer=tracer)
+        return sim.run(copy.deepcopy(trace))
+
+    # interleave the arms (off, on, off, on, ...) and take best-of-N
+    # per arm: sequential best-of-N lets machine-load drift between the
+    # two measurements masquerade as (even negative) tracing overhead
+    repeat = 4 if fast else 6
+    us_off = us_on = float("inf")
+    res_off = res_on = tracer = None
+    for _ in range(repeat):
+        r, us = timed(replay, repeat=1)
+        if us < us_off:
+            res_off, us_off = r, us
+        t = Tracer(clock=EventClock())
+        r, us = timed(replay, t, repeat=1)
+        if us < us_on:
+            res_on, us_on, tracer = r, us, t
+    tok_off = _tokens(res_off)
+    tok_on = _tokens(res_on)
+
+    tps_off = tok_off / (us_off / 1e6)
+    tps_on = tok_on / (us_on / 1e6)
+    overhead_e2e = 1.0 - tps_on / tps_off if tps_off else 0.0
+
+    # primary overhead: calibrated per-span cost x span volume, against
+    # the best-of-N base time — deterministic in span count, immune to
+    # the run-to-run jitter that dominates the direct A/B delta
+    span_cost_s = _calibrate_span_cost()
+    derived_s = span_cost_s * tracer.n_spans
+    overhead = derived_s / (us_off / 1e6) if us_off else 0.0
+
+    rows.append(emit("obs/tracing-off", us_off,
+                     f"requests={len(trace)};completed={res_off.completed()};"
+                     f"tokens_per_s={tps_off:.0f}"))
+    rows.append(emit("obs/tracing-on", us_on,
+                     f"completed={res_on.completed()};"
+                     f"spans={tracer.n_spans};"
+                     f"flight_dumps={res_on.flight_dumps};"
+                     f"tokens_per_s={tps_on:.0f}"))
+    rows.append(emit("obs/span-cost", span_cost_s * 1e6,
+                     f"us_per_span={span_cost_s * 1e6:.3f};"
+                     f"spans={tracer.n_spans};"
+                     f"derived_ms={derived_s * 1e3:.1f}"))
+    rows.append(emit("obs/overhead", derived_s * 1e6,
+                     f"overhead_frac={overhead:.4f};"
+                     f"overhead_frac_e2e={overhead_e2e:.4f};"
+                     f"within_3pct={int(overhead < 0.03)}"))
+
+    # per-phase decomposition coverage over every finished request
+    per_phase = dict.fromkeys(REQUEST_PHASES, 0.0)
+    total = exact = 0
+    root_time = 0.0
+    for spans in tracer.by_request().values():
+        roots = [s for s in spans if s.name == "request"]
+        if not roots:
+            continue
+        root = roots[0]
+        kids = {s.name: s.duration for s in spans
+                if s.parent_id == root.span_id}
+        total += 1
+        if set(kids) == set(REQUEST_PHASES) and abs(
+                sum(kids.values()) - root.duration) <= 1e-9:
+            exact += 1
+        for p in REQUEST_PHASES:
+            per_phase[p] += kids.get(p, 0.0)
+        root_time += root.duration
+    shares = ";".join(
+        f"{p}_share={per_phase[p] / root_time:.4f}" if root_time else
+        f"{p}_share=0" for p in REQUEST_PHASES)
+    rows.append(emit("obs/decomposition", 0.0,
+                     f"requests={total};exact={exact};"
+                     f"coverage={exact / total if total else 0:.4f};"
+                     f"{shares}"))
+
+    for phase, d in sorted(res_on.cost_drift.items()):
+        rows.append(emit(
+            f"obs/drift/{phase}", d["measured_s"] * 1e6,
+            f"count={d['count']};modeled_s={d['modeled_s']:.3f};"
+            f"bias={d['bias']:+.2e};mare={d['mean_abs_rel_err']:.2e}"))
+
+    os.makedirs(OUTDIR, exist_ok=True)
+    sample = os.path.join(OUTDIR, "obs_sample.perfetto.json")
+    n = write_perfetto(tracer, sample)
+    rows.append(emit("obs/sample-trace", 0.0,
+                     f"spans={n};path={sample}"))
+    return rows

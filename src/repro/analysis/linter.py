@@ -68,7 +68,14 @@ RULES: Dict[str, str] = {
     "side-effect-cond": "statement-position conditional expression",
     "async-blocking": "blocking call inside an async function stalls "
                       "the event loop",
+    "raw-log": "print()/ad-hoc logging call in library code; emit "
+               "through the tracer or telemetry instead",
 }
+
+# ad-hoc log sinks: `logging.info(...)`, `logger.debug(...)`, etc.
+_LOG_LEVEL_METHODS = {"debug", "info", "warning", "warn", "error",
+                      "critical", "exception", "log", "basicConfig"}
+_LOGGER_NAMES = {"logging", "logger", "log"}
 
 # dotted names whose call blocks the thread — poison inside `async def`
 _ASYNC_BLOCKING_CALLS = {
@@ -180,6 +187,9 @@ class Linter(ast.NodeVisitor):
         self._fn_stack: List[dict] = []
         self._loop_depth = 0
         self._class_stack: List[ast.ClassDef] = []
+        # launch/ entry points are CLI drivers: stdout IS their UI
+        norm = "/" + path.replace(os.sep, "/").lstrip("/")
+        self._raw_log_exempt = "/launch/" in norm
 
     # -- helpers ----------------------------------------------------------
     def _emit(self, node: ast.AST, rule: str, message: str,
@@ -352,6 +362,17 @@ class Linter(ast.NodeVisitor):
         fn = _dotted(node.func)
         in_traced = self._in_traced()
         hot = in_traced or self._in_decode_path()
+
+        if not self._raw_log_exempt and fn is not None:
+            if fn == ("print",):
+                self._emit(node, "raw-log",
+                           "print() in library code bypasses the tracer "
+                           "and telemetry; structured paths only")
+            elif len(fn) == 2 and fn[0] in _LOGGER_NAMES \
+                    and fn[1] in _LOG_LEVEL_METHODS:
+                self._emit(node, "raw-log",
+                           f"ad-hoc {'.'.join(fn)}() in library code; "
+                           f"route through the tracer/telemetry layer")
 
         if fn in _ASYNC_BLOCKING_CALLS and self._in_async():
             name = self._fn_stack[-1]["node"].name

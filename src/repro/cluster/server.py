@@ -32,13 +32,24 @@ class SimServer:
     """State machine advanced by the cluster simulator's event loop."""
 
     def __init__(self, server_id: int, model: ServerModel,
-                 bank_mode: str = "padded", decode_block: int = 1):
+                 bank_mode: str = "padded", decode_block: int = 1,
+                 tracer=None):
         self.sid = server_id
         self.model = model
         self.bank_mode = bank_mode
         # mirrors ServingEngine(decode_block=): decode iterations are
         # dispatched k at a time, amortizing the per-dispatch floor
         self.decode_block = decode_block
+        # obs.Tracer: iteration spans carry the already-charged cost as
+        # attrs["predicted"] so the drift meter never re-runs the model
+        # in the sim hot loop (sim drift is exactly 0 by construction)
+        self.tracer = tracer
+        self._track = f"server:{server_id}"
+        # staged decode span: contiguous same-batch decode iterations
+        # coalesce into one span ([start, end, predicted, batch, iters])
+        # — mirrors the engine's decode_steps(k) emitting iters=k, and
+        # keeps tracing cost off the per-iteration hot path
+        self._dec_span: Optional[list] = None
         self.waiting: List[SimRequest] = []
         self.running: List[SimRequest] = []
         self.finished: List[SimRequest] = []   # completion feed; the
@@ -106,6 +117,20 @@ class SimServer:
         t = min(ready)
         return max(t, now)
 
+    def flush_spans(self) -> None:
+        """Emit the staged decode span (a run of contiguous same-batch
+        decode iterations coalesced into one span with ``iters=N`` —
+        the same shape the engine's ``decode_steps(k)`` emits)."""
+        st = self._dec_span
+        if st is None or self.tracer is None:
+            return
+        self._dec_span = None
+        self.tracer.record(
+            "decode", st[0], st[1], cat="iteration", track=self._track,
+            attrs={"predicted": st[2], "batch": st[3],
+                   "steps": self.decode_block, "iters": st[4],
+                   "bank_mode": self.bank_mode})
+
     def step(self, now: float) -> float:
         """Run one iteration starting at `now`; returns its finish time.
         Prefill-prioritized (matches S-LoRA's scheduler)."""
@@ -127,6 +152,7 @@ class SimServer:
                 end = now + t_iter
                 for r in batch:
                     self.waiting.remove(r)
+                    r.prefill_start = now
                     r.prefill_done = end
                     r.decoded = 1        # first token out of prefill
                     if r.output_len <= 1:
@@ -138,10 +164,33 @@ class SimServer:
                 self.prefill_tokens += tokens
                 self.busy_time += t_iter
                 self.busy_until = end
+                if self.tracer is not None:
+                    self.flush_spans()
+                    self.tracer.record(
+                        "prefill", now, end, cat="iteration",
+                        track=self._track,
+                        attrs={"predicted": t_iter, "tokens": tokens,
+                               "batch": len(batch),
+                               "bank_mode": self.bank_mode})
                 return end
         if self.running:
             t_iter = self._decode_cost(self.running, now)
             end = now + t_iter
+            if self.tracer is not None:
+                # stage rather than record: back-to-back decode
+                # iterations at the same batch size extend the staged
+                # span instead of paying the full record cost per iter
+                st = self._dec_span
+                if st is not None and st[3] == len(self.running) \
+                        and now - st[1] <= 1e-12:
+                    st[1] = end
+                    st[2] += t_iter
+                    st[4] += 1
+                else:
+                    if st is not None:
+                        self.flush_spans()
+                    self._dec_span = [now, end, t_iter,
+                                      len(self.running), 1]
             done = []
             for r in self.running:
                 r.decoded += 1

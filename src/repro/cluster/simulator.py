@@ -65,6 +65,12 @@ class SimResult:
     final_servers: int = 0           # active fleet size at end of run
     drift_events: List = dataclasses.field(default_factory=list)
     actions: List = dataclasses.field(default_factory=list)
+    # observability (tracer-attached runs only): per-phase modeled vs
+    # measured iteration error — exactly 0 on this substrate (sim time
+    # IS the model; nonzero means the span plumbing broke)
+    cost_drift: dict = dataclasses.field(default_factory=dict)
+    trace_spans: int = 0
+    flight_dumps: int = 0
 
     def _eligible(self):
         return [r for r in self.requests if r.arrival >= self.warmup]
@@ -125,7 +131,8 @@ class ClusterSimulator:
                  prefetch: bool = False,
                  network: Optional[NetworkModel] = None,
                  controller=None,
-                 provision_delay: float = 0.0):
+                 provision_delay: float = 0.0,
+                 tracer=None, flight_recorder=None):
         if access_mode not in ("migrate", "remote-read"):
             raise ValueError(f"unknown access_mode {access_mode!r}")
         self.warmup = warmup
@@ -149,10 +156,31 @@ class ClusterSimulator:
         self.seed = seed
         ranks = {a.rank for a in adapters}
         self.operating_points = profile_operating_points(self.model, ranks)
+        # observability: span tracing on the event clock, per-phase
+        # modeled-vs-measured drift, and flight-recorder dumps on
+        # controller scale decisions / timeouts
+        self.tracer = tracer
+        self.flight_recorder = flight_recorder
+        self.cost_drift = None
+        if tracer is not None:
+            from repro.obs import CostModelDrift
+            self.cost_drift = CostModelDrift(self.model)
+            tracer.add_listener(self.cost_drift.observe)
+            if flight_recorder is not None:
+                tracer.add_listener(flight_recorder.observe)
 
     def run(self, trace: List[SimRequest]) -> SimResult:
+        tracer = self.tracer
+        recorder = self.flight_recorder
+        record_spans = None
+        clock_adv = (getattr(tracer.clock, "advance", None)
+                     if tracer is not None else None)
+        if tracer is not None:
+            from repro.obs import record_request_spans
+            record_spans = record_request_spans
         servers = [SimServer(i, self.model, bank_mode=self.bank_mode,
-                             decode_block=self.decode_block)
+                             decode_block=self.decode_block,
+                             tracer=tracer)
                    for i in range(self.n)]
         ctrl = self.controller
         if ctrl is not None:   # lazy: keeps controller-less sims light
@@ -178,6 +206,7 @@ class ClusterSimulator:
         placement = self.policy.place(ctx)
         router = RoutingTable(placement, seed=self.seed)
         pool = AdapterStore(self.n, self.adapters, self.network)
+        pool.tracer = tracer
         pool.seed(placement)
         max_adapters = pool.max_adapters_per_server()
         total_bytes = pool.total_bytes()
@@ -232,14 +261,25 @@ class ClusterSimulator:
                     or pool.inflight_count() > 0)
 
         def feed_completions():
-            """Drain per-server completion feeds into the controller,
-            stamped at the request's own finish time."""
+            """Drain per-server completion feeds into the controller
+            (stamped at the request's own finish time) and the tracer
+            (canonical per-request span trees — the same helper the
+            engine facade uses, so span names match across substrates).
+
+            Also the event clock's pace point: spans carry explicit
+            timestamps, so the tracer clock only needs to track event
+            time here — advancing it on every heap pop costs ~10% of
+            the whole sim (most pops are busy-wait re-pushes)."""
+            if clock_adv is not None:
+                clock_adv(now)
             for s in servers:
                 if not s.finished:
                     continue
-                if ctrl is not None:
-                    for r in s.finished:
+                for r in s.finished:
+                    if ctrl is not None:
                         ctrl.observe_completion(r, r.finish)
+                    if record_spans is not None:
+                        record_spans(tracer, r)
                 s.finished.clear()
 
         def do_rebalance(now: float):
@@ -287,6 +327,12 @@ class ClusterSimulator:
 
         def execute(actions, now: float):
             nonlocal ctrl_rebalances, scale_ups, drains, retires
+            if recorder is not None:
+                inputs = getattr(ctrl, "last_inputs", {})
+                for a in actions:
+                    if a.kind in ("scale-up", "drain"):
+                        recorder.dump(a.kind, now,
+                                      {**dataclasses.asdict(a), **inputs})
             for a in actions:
                 if a.kind == "rebalance":
                     ctrl_rebalances += 1
@@ -375,6 +421,13 @@ class ClusterSimulator:
                         timed_out += 1
                         if ctrl is not None:
                             ctrl.observe_timeout(now)
+                        if recorder is not None:
+                            recorder.dump(
+                                "timeout", now,
+                                {"req_id": r.req_id,
+                                 "adapter_id": r.adapter_id,
+                                 "server": r.server,
+                                 "arrival": r.arrival})
                 if s.has_work(now):
                     end = s.step(now)
                     feed_completions()
@@ -417,10 +470,14 @@ class ClusterSimulator:
                 sid = pool.add_server()
                 servers.append(SimServer(sid, self.model,
                                          bank_mode=self.bank_mode,
-                                         decode_block=self.decode_block))
+                                         decode_block=self.decode_block,
+                                         tracer=tracer))
                 active.add(sid)
                 provisioned_at[sid] = payload    # billed from request
                 do_rebalance(now)   # fold the new server into placement
+        for s in servers:
+            s.flush_spans()          # staged (coalesced) decode spans
+        feed_completions()           # trailing finishes, if any
 
         if self.policy.replicate_all:
             max_adapters = len(self.adapters)
@@ -460,6 +517,10 @@ class ClusterSimulator:
             drift_events=(list(ctrl.detector.events)
                           if ctrl is not None else []),
             actions=list(ctrl.actions) if ctrl is not None else [],
+            cost_drift=(self.cost_drift.summary()
+                        if self.cost_drift is not None else {}),
+            trace_spans=tracer.n_spans if tracer is not None else 0,
+            flight_dumps=recorder.n_dumps if recorder is not None else 0,
         )
 
 

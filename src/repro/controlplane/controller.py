@@ -99,6 +99,9 @@ class ClusterController:
         self.operating_points = operating_points
         self.adapter_ranks = adapter_ranks or {}
         self.actions: List[Action] = []       # everything ever emitted
+        # decision inputs of the most recent tick — the flight
+        # recorder's audit record for scale/drain/SLO-violation dumps
+        self.last_inputs: dict = {}
         self._bad_ticks = 0
         self._good_ticks = 0
         self._last_scale = -float("inf")
@@ -147,6 +150,18 @@ class ClusterController:
 
         n_active = len(state.active)
         violated = self.slo.violated(now, cfg.min_samples)
+        self.last_inputs = {
+            "now": now,
+            "n_active": n_active,
+            "attainment": self.slo.attainment(now),
+            "window_samples": self.slo.sample_count(now),
+            "violated": violated,
+            "bad_ticks": self._bad_ticks + (1 if violated else 0),
+            "good_ticks": self._good_ticks,
+            "windowed_p95_ttft": self.telemetry.ttft_percentile(95, now),
+            "demand_servers": self.demand_servers(now),
+            "drift_events": [dataclasses.asdict(e) for e in new_drift],
+        }
         if violated:
             self._bad_ticks += 1
             self._good_ticks = 0

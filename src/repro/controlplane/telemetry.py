@@ -12,8 +12,9 @@ the actual recent distribution.
 """
 from __future__ import annotations
 
+import bisect
 import collections
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, Iterator, List, Optional, Tuple
 
 from repro.serving.metrics import percentile
 
@@ -24,8 +25,11 @@ class SlidingWindow:
     def __init__(self, horizon: float):
         self.horizon = horizon
         self._samples: Deque[Tuple[float, float]] = collections.deque()
+        self._first: Optional[float] = None   # first-ever sample time
 
     def push(self, t: float, value: float) -> None:
+        if self._first is None:
+            self._first = t
         self._samples.append((t, value))
 
     def prune(self, now: float) -> None:
@@ -48,10 +52,53 @@ class SlidingWindow:
 
     def rate(self, now: float) -> float:
         """Sum of samples per second over the (elapsed part of the)
-        window — early in a run the divisor is the time actually
-        covered, not the full horizon."""
-        span = min(self.horizon, now) or 1.0
+        window. Early in a feed the divisor is the time actually covered
+        — measured from the first sample ever pushed, NOT from t=0: an
+        engine wall clock or an offset-arrival trace can start feeding
+        at an arbitrary clock value, and dividing by ``now`` would
+        deflate those rates by however late the feed began."""
+        if self._first is None:
+            return 0.0
+        span = min(self.horizon, now - self._first)
+        if span <= 0.0:
+            span = 1.0
         return self.total(now) / span
+
+
+# log-spaced latency buckets, 1ms .. 60s (Prometheus `le` upper bounds)
+DEFAULT_LATENCY_BOUNDS = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
+
+
+class Histogram:
+    """Cumulative fixed-bucket histogram with Prometheus `histogram`
+    semantics: ``cumulative()`` yields ``(le, count-with-value<=le)``
+    pairs ending in ``("+Inf", total)``, plus ``sum``/``count`` — the
+    `_bucket`/`_sum`/`_count` series external scrapers aggregate."""
+
+    def __init__(self, bounds=DEFAULT_LATENCY_BOUNDS):
+        self.bounds = tuple(bounds)
+        self._counts = [0] * (len(self.bounds) + 1)  # last = +Inf
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, value: float) -> None:
+        # Prometheus le semantics: bucket i counts value <= bounds[i]
+        self._counts[bisect.bisect_left(self.bounds, value)] += 1
+        self.sum += value
+        self.count += 1
+
+    def cumulative(self) -> Iterator[Tuple[object, int]]:
+        cum = 0
+        for le, c in zip(self.bounds, self._counts):
+            cum += c
+            yield le, cum
+        yield "+Inf", self.count
+
+    def to_dict(self) -> dict:
+        return {"buckets": list(self.cumulative()),
+                "sum": self.sum, "count": self.count}
 
 
 class TelemetryHub:
@@ -63,6 +110,11 @@ class TelemetryHub:
         self._ttft = SlidingWindow(window)
         self._tbt = SlidingWindow(window)
         self._server_ttft: Dict[int, SlidingWindow] = {}
+        # cumulative (never-pruned) latency histograms: the Prometheus
+        # `histogram`-typed complement of the windowed percentiles, so
+        # external scrapers can rate() and aggregate across gateways
+        self.ttft_hist = Histogram()
+        self.tbt_hist = Histogram()
         self.arrivals = 0
         self.completions = 0
         self.timeouts = 0
@@ -88,8 +140,10 @@ class TelemetryHub:
         if ttft is not None and ttft >= 0:
             self._ttft.push(now, ttft)
             self._win(self._server_ttft, req.server).push(now, ttft)
+            self.ttft_hist.observe(ttft)
         if tbt is not None and tbt > 0:
             self._tbt.push(now, tbt)
+            self.tbt_hist.observe(tbt)
 
     def observe_timeout(self, now: float) -> None:
         self.timeouts += 1
@@ -148,6 +202,8 @@ class TelemetryHub:
             "ttft_p95": self.ttft_percentile(95, now),
             "tbt_p50": self.tbt_percentile(50, now),
             "tbt_p95": self.tbt_percentile(95, now),
+            "ttft_hist": self.ttft_hist.to_dict(),
+            "tbt_hist": self.tbt_hist.to_dict(),
             "adapter_token_rates": self.adapter_rates(now),
             "adapter_request_rates": {
                 aid: w.rate(now)

@@ -115,6 +115,9 @@ class AdapterStore:
         self.host_hits = 0
         self.ssd_fetches = 0
         self.drain_fetches = 0
+        # obs.Tracer (host-attached): every started transfer emits a
+        # "transfer" span on the store track, start -> modeled ETA
+        self.tracer = None
 
     # -- initial seeding -----------------------------------------------
     def seed(self, placement: Placement) -> None:
@@ -328,6 +331,12 @@ class AdapterStore:
                          src_server=src_server, nbytes=nbytes,
                          latency=latency, eta=eta)
         self._inflight[key] = plan
+        if self.tracer is not None:
+            self.tracer.record(
+                "transfer", now, eta, cat="transfer", track="store",
+                attrs={"adapter_id": adapter_id, "mode": mode,
+                       "source": source, "src_server": src_server,
+                       "dest": server_id, "nbytes": nbytes})
         # `fetches`/`fetch_bytes` stay miss-driven (their pre-data-plane
         # meaning) so they compare across access modes; proactive warms
         # and drain migrations are counted separately

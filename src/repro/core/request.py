@@ -36,6 +36,7 @@ class ServeRequest:
     prompt: Optional[List[int]] = None     # concrete tokens (real engine)
     # lifecycle, stamped on the backend's clock
     ready: float = 0.0                     # arrival + adapter fetch latency
+    prefill_start: float = -1.0            # admitted into a prefill batch
     prefill_done: float = -1.0
     finish: float = -1.0
     server: int = -1

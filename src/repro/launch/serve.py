@@ -114,6 +114,16 @@ def main():
                     help="gateway: per-tenant admission rate (req/s)")
     ap.add_argument("--max-inflight", type=int, default=None,
                     help="gateway: per-tenant concurrent-request cap")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's span trace on exit: Perfetto/"
+                         "Chrome-trace JSON (open in ui.perfetto.dev), "
+                         "or one-span-per-line JSONL when PATH ends in "
+                         ".jsonl")
+    ap.add_argument("--flight-recorder", default=None, metavar="DIR",
+                    help="keep a bounded ring of recent spans and dump "
+                         "it (plus a controller-decision audit record) "
+                         "into DIR on SLO violations, scale-up/drain "
+                         "decisions, and timeouts")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--duration", type=float, default=6.0,
@@ -151,11 +161,27 @@ def main():
                             decode_block=args.decode_block,
                             lora_kernel=args.lora_kernel,
                             mesh_shape=mesh_shape)
+    tracer = recorder = None
+    if args.trace_out or args.flight_recorder:
+        from repro.obs import FlightRecorder, Tracer, WallClock
+        tracer = Tracer(clock=WallClock())
+        if args.flight_recorder:
+            recorder = FlightRecorder(out_dir=args.flight_recorder)
     cluster = LoRAServeCluster(
         backend, adapters, policy=args.policy, network=NetworkModel(),
         rebalance_period=args.rebalance_period, seed=args.seed,
         access_mode=args.access_mode, prefetch=args.prefetch,
-        controller=controller)
+        controller=controller, tracer=tracer, flight_recorder=recorder)
+
+    def _write_trace():
+        if tracer is None or not args.trace_out:
+            return
+        from repro.obs import write_jsonl, write_perfetto
+        writer = (write_jsonl if args.trace_out.endswith(".jsonl")
+                  else write_perfetto)
+        n = writer(tracer, args.trace_out)
+        print(f"trace: {n} spans -> {args.trace_out}")
+
     if args.serve:
         from .server import run_gateway
         host, _, port = args.serve.rpartition(":")
@@ -166,6 +192,7 @@ def main():
               f"timed_out={report.timed_out} "
               f"registered={report.registered} "
               f"unregistered={report.unregistered}")
+        _write_trace()
         print("gateway drained OK")
         return
 
@@ -199,6 +226,17 @@ def main():
               f"final_servers={report.final_servers} "
               f"gpu_seconds={report.gpu_seconds:.1f} "
               f"drift_events={len(report.drift_events)}")
+    if tracer is not None:
+        _write_trace()
+        for phase, d in sorted(report.cost_drift.items()):
+            print(f"costmodel[{phase}]: n={d['count']} "
+                  f"modeled={d['modeled_s']:.3f}s "
+                  f"measured={d['measured_s']:.3f}s "
+                  f"bias={d['bias']:+.1%} "
+                  f"mare={d['mean_abs_rel_err']:.1%}")
+        if recorder is not None:
+            print(f"flight_recorder: dumps={recorder.n_dumps} "
+                  f"-> {args.flight_recorder}")
     print("cluster drained OK")
 
 

@@ -269,8 +269,15 @@ class ServeGateway:
             return await self._send(writer, 400, {"error": str(e)})
         tenant = req.headers.get("x-tenant") or body.get("user") \
             or "default"
-        ok, retry_after, reason = self.admission.admit(
-            tenant, self.cluster.clock())
+        tracer = getattr(self.cluster, "tracer", None)
+        t_adm = self.cluster.clock()
+        ok, retry_after, reason = self.admission.admit(tenant, t_adm)
+        if tracer is not None:
+            tracer.record("admission", t_adm, self.cluster.clock(),
+                          cat="gateway", track="gateway",
+                          req_id=sreq.req_id,
+                          attrs={"tenant": tenant, "admitted": ok,
+                                 "reason": reason})
         if not ok:
             return await self._send(
                 writer, 429,
@@ -286,6 +293,13 @@ class ServeGateway:
                 server = self.cluster.submit(sreq, self.cluster.clock())
             except UnknownAdapterError as e:
                 return await self._send(writer, 404, {"error": str(e)})
+            if tracer is not None:
+                # HTTP receive -> routed/submitted on the cluster clock
+                tracer.record("gateway.receive", sreq.arrival,
+                              self.cluster.clock(), cat="gateway",
+                              track="gateway", req_id=sreq.req_id,
+                              attrs={"tenant": tenant, "server": server,
+                                     "adapter_id": sreq.adapter_id})
             if body.get("stream", True):
                 return await self._stream_response(sreq, server, queue,
                                                    writer)
@@ -329,6 +343,12 @@ class ServeGateway:
             await writer.drain()
         writer.write(http.sse_event("[DONE]"))
         await writer.drain()
+        tracer = getattr(self.cluster, "tracer", None)
+        if tracer is not None:
+            t = self.cluster.clock()
+            tracer.record("stream.finish", t, t, cat="gateway",
+                          track="gateway", req_id=sreq.req_id,
+                          attrs={"streamed": index})
         return True    # SSE streams are close-delimited
 
     async def _json_response(self, sreq, server: int, queue,

@@ -45,6 +45,21 @@ class _Writer:
             else:
                 self.lines.append(f"{name} {_fmt(v)}")
 
+    def histogram(self, name: str, help_text: str, snap) -> None:
+        """Render a ``Histogram.to_dict()`` snapshot as a real
+        Prometheus ``histogram`` family: cumulative ``_bucket{le=...}``
+        series plus ``_sum``/``_count``. Empty (or absent) histograms
+        are omitted entirely, matching ``metric``'s behavior."""
+        if not snap or not snap.get("count"):
+            return
+        self.lines.append(f"# HELP {name} {help_text}")
+        self.lines.append(f"# TYPE {name} histogram")
+        for le, cum in snap["buckets"]:
+            le_s = le if isinstance(le, str) else _fmt(float(le))
+            self.lines.append(f'{name}_bucket{{le="{le_s}"}} {cum}')
+        self.lines.append(f"{name}_sum {_fmt(float(snap['sum']))}")
+        self.lines.append(f"{name}_count {snap['count']}")
+
     def render(self) -> str:
         return "\n".join(self.lines) + "\n"
 
@@ -139,4 +154,30 @@ def render_metrics(report, telemetry: Dict,
              "Windowed per-adapter token demand (tokens/s)",
              [({"adapter": aid}, rate) for aid, rate in
               sorted(telemetry.get("adapter_token_rates", {}).items())])
+    # -- cumulative latency histograms -----------------------------------
+    w.histogram("repro_ttft_seconds",
+                "TTFT distribution over all finished requests",
+                telemetry.get("ttft_hist"))
+    w.histogram("repro_tbt_seconds",
+                "Time-between-tokens distribution over finished requests",
+                telemetry.get("tbt_hist"))
+    # -- cost-model drift (tracer-fed, empty without a tracer) -----------
+    drift = getattr(report, "cost_drift", None) or {}
+    w.metric("repro_costmodel_seconds_total", "counter",
+             "Modeled vs measured phase time accumulated by the tracer",
+             [({"phase": ph, "kind": kind}, d.get(f"{kind}_s"))
+              for ph, d in sorted(drift.items())
+              for kind in ("modeled", "measured")])
+    w.metric("repro_costmodel_iterations_total", "counter",
+             "Iteration spans paired with a cost-model prediction",
+             [({"phase": ph}, d.get("count"))
+              for ph, d in sorted(drift.items())])
+    w.metric("repro_costmodel_drift_ratio", "gauge",
+             "Signed (measured-modeled)/modeled bias per phase",
+             [({"phase": ph}, d.get("bias"))
+              for ph, d in sorted(drift.items())])
+    w.metric("repro_costmodel_mean_abs_rel_err", "gauge",
+             "Mean absolute relative error of the phase cost model",
+             [({"phase": ph}, d.get("mean_abs_rel_err"))
+              for ph, d in sorted(drift.items())])
     return w.render()

@@ -147,9 +147,24 @@ class SimBackend:
         self._completed: List[ServeRequest] = []
         self._timed_out: List[ServeRequest] = []
         self._util_prev: Dict[int, tuple] = {}
+        self.tracer = None
+
+    def set_tracer(self, tracer) -> None:
+        """Attach an ``obs.Tracer``; servers emit iteration spans on the
+        virtual clock (applies to servers added later too)."""
+        self.tracer = tracer
+        for s in self.servers:
+            s.tracer = tracer
 
     def start(self) -> None:
         pass
+
+    def flush_spans(self) -> None:
+        """Emit any staged (coalesced) decode spans — called before a
+        report/snapshot reads the tracer, so span totals and drift
+        cover every iteration executed so far."""
+        for s in self.servers:
+            s.flush_spans()
 
     def submit(self, server_id: int, req: ServeRequest,
                now: float) -> None:
@@ -243,7 +258,8 @@ class SimBackend:
         self.n_servers += 1
         self.servers.append(SimServer(sid, self.model,
                                       bank_mode=self.bank_mode,
-                                      decode_block=self.decode_block))
+                                      decode_block=self.decode_block,
+                                      tracer=self.tracer))
         self._hosted.append({})
         self._remote.append(set())
         return sid
@@ -314,6 +330,15 @@ class EngineBackend:
         self._remote: List[set] = [set() for _ in range(n_servers)]
         self._t0 = time.monotonic()
         self._timed_out: List[ServeRequest] = []
+        self.tracer = None
+
+    def set_tracer(self, tracer) -> None:
+        """Attach an ``obs.Tracer``; engines (built lazily) emit
+        iteration spans on the shared wall clock."""
+        self.tracer = tracer
+        for eng in self.engines:
+            if eng is not None:
+                eng.tracer = tracer
 
     # -- clock ----------------------------------------------------------
     def start(self) -> None:
@@ -411,7 +436,8 @@ class EngineBackend:
                 seed=self.seed, bank_mode=self.bank_mode,
                 decode_block=self.decode_block,
                 lora_kernel=self.lora_kernel, mesh=self._mesh,
-                page_pool=pool, clock=self.wall_now)
+                page_pool=pool, clock=self.wall_now,
+                tracer=self.tracer, server_id=server_id)
         else:
             self.engines[server_id].load_adapters(adapter_ranks)
 

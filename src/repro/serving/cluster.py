@@ -121,6 +121,10 @@ class ClusterReport:
     final_servers: int = 0             # active fleet size at end of run
     drift_events: List = dataclasses.field(default_factory=list)
     controller_actions: List = dataclasses.field(default_factory=list)
+    # observability (tracer-attached runs only)
+    cost_drift: dict = dataclasses.field(default_factory=dict)
+    trace_spans: int = 0
+    flight_dumps: int = 0
 
     def _eligible(self) -> List[ServeResult]:
         return [r for r in self.results
@@ -182,7 +186,8 @@ class LoRAServeCluster:
                  seed: int = 0, operating_points=None, server_model=None,
                  access_mode: str = "migrate", prefetch: bool = False,
                  controller=None, track_tokens: bool = False,
-                 telemetry_window: float = 30.0):
+                 telemetry_window: float = 30.0,
+                 tracer=None, flight_recorder=None):
         if operating_points is None:
             from repro.cluster.costmodel import (ServerModel,
                                                  profile_operating_points)
@@ -245,6 +250,30 @@ class LoRAServeCluster:
         self._next_reb = float("inf")
         self._next_ctick = float("inf")
         self._end_time = 0.0
+        # -- observability wiring (before _seed_backend so lazily built
+        # engines inherit the tracer) --------------------------------------
+        self.tracer = tracer
+        self.flight_recorder = flight_recorder
+        self.cost_drift = None
+        self._slo_bad = False
+        self._tracer_adv = None
+        self._record_spans = None
+        if tracer is not None:
+            from repro.cluster.costmodel import ServerModel
+            from repro.obs import CostModelDrift, record_request_spans
+            self._record_spans = record_request_spans
+            model = (server_model
+                     or getattr(backend, "model", None) or ServerModel())
+            self.cost_drift = CostModelDrift(model)
+            tracer.add_listener(self.cost_drift.observe)
+            if flight_recorder is not None:
+                tracer.add_listener(flight_recorder.observe)
+            if hasattr(backend, "set_tracer"):
+                backend.set_tracer(tracer)
+            self.orch.store.tracer = tracer
+            # virtual substrate: keep the tracer's event clock at the
+            # facade's notion of now (cheap no-op for wall clocks)
+            self._tracer_adv = getattr(tracer.clock, "advance", None)
         self._seed_backend()
         # running peaks across rebalances (the store GCs lazily, so the
         # end-of-run state understates what a server actually held)
@@ -330,6 +359,11 @@ class LoRAServeCluster:
                 # promotes it at plan.eta
                 self.backend.load_adapter_remote(sid, aid, req.rank,
                                                  plan.read_peer)
+        if self.tracer is not None:
+            # zero-width instant: the routing decision itself
+            self.tracer.record("route", now, now, cat="gateway",
+                               track="control", req_id=req.req_id,
+                               attrs={"server": sid, "adapter_id": aid})
         self.backend.submit(sid, req, now)
         self.per_server_counts[sid] += 1
         self.routed[req.req_id] = sid
@@ -497,7 +531,8 @@ class LoRAServeCluster:
             queue_depth={s: self.backend.queue_depth(s) for s in live},
             utilization={s: self.backend.utilization(s, now)
                          for s in live})
-        for a in ctrl.tick(state):
+        actions = ctrl.tick(state)
+        for a in actions:
             if a.kind == "rebalance":
                 self.controller_rebalances += 1
                 # skip if a periodic rebalance already ran this instant:
@@ -524,6 +559,19 @@ class LoRAServeCluster:
                 self.orch.retire_server(a.server)
                 self.backend.retire_server(a.server)
                 self._retired_at[a.server] = now
+        rec = self.flight_recorder
+        if rec is not None:
+            inputs = getattr(ctrl, "last_inputs", {})
+            # scale decisions and fresh SLO violations each snapshot the
+            # span ring with the controller's decision inputs as audit
+            for a in actions:
+                if a.kind in ("scale-up", "drain"):
+                    rec.dump(a.kind, now,
+                             {**dataclasses.asdict(a), **inputs})
+            violated = bool(inputs.get("violated", False))
+            if violated and not self._slo_bad:
+                rec.dump("slo-violation", now, dict(inputs))
+            self._slo_bad = violated
 
     # -- token surfacing ---------------------------------------------------
     def _new_tokens(self, req: ServeRequest) -> Tuple:
@@ -552,6 +600,8 @@ class LoRAServeCluster:
         self.start()
         if now is None:
             now = self.clock()
+        if self._tracer_adv is not None:
+            self._tracer_adv(now)
         events: List[ClusterEvent] = []
         ctrl = self.controller
         self._poll_store(now)
@@ -573,6 +623,8 @@ class LoRAServeCluster:
             self.metrics.record(req)
             self.hub.observe_completion(req, done_at)
             self._finished.append(req)
+            if self._record_spans is not None:
+                self._record_spans(self.tracer, req)
             if ctrl is not None:
                 ctrl.observe_completion(req, done_at)
             toks = self._new_tokens(req) if self.track_tokens else ()
@@ -584,6 +636,12 @@ class LoRAServeCluster:
             if ctrl is not None:
                 ctrl.observe_timeout(now)
             self._stream_pos.pop(req.req_id, None)
+            if self.flight_recorder is not None:
+                self.flight_recorder.dump(
+                    "timeout", now,
+                    {"req_id": req.req_id,
+                     "adapter_id": req.adapter_id,
+                     "server": req.server, "arrival": req.arrival})
             events.append(ClusterEvent("timeout", req, (), now))
         self._finish_retiring(now)
         self._now = max(self._now, now)
@@ -706,6 +764,10 @@ class LoRAServeCluster:
         return self._report(list(self._submitted))
 
     def _report(self, reqs: List[ServeRequest]) -> ClusterReport:
+        if self.tracer is not None:
+            flush = getattr(self.backend, "flush_spans", None)
+            if flush is not None:
+                flush()     # staged (coalesced) decode spans
         done_ids = {id(r) for r in self._finished}
         results = []
         for r in reqs:
@@ -762,4 +824,10 @@ class LoRAServeCluster:
                           if self.controller is not None else []),
             controller_actions=(list(self.controller.actions)
                                 if self.controller is not None else []),
+            cost_drift=(self.cost_drift.summary()
+                        if self.cost_drift is not None else {}),
+            trace_spans=(self.tracer.n_spans
+                         if self.tracer is not None else 0),
+            flight_dumps=(self.flight_recorder.n_dumps
+                          if self.flight_recorder is not None else 0),
         )

@@ -63,9 +63,15 @@ class ServingEngine:
                  bank_mode: str = "padded", decode_block: int = 1,
                  lora_kernel: str = "einsum", mesh=None,
                  page_pool: Optional[UnifiedPagePool] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer=None, server_id: int = 0):
         from .sharding import make_engine_sharding
         self.cfg = cfg
+        # obs.Tracer: per-iteration spans (prefill groups, decode
+        # dispatches) stamped on the engine clock, carrying the batch
+        # shape so the drift meter can price them with ServerModel
+        self.tracer = tracer
+        self._track = f"server:{server_id}"
         self.bank_mode = bank_mode
         self.decode_block = decode_block
         self.lora_kernel = lora_kernel
@@ -270,7 +276,23 @@ class ServingEngine:
         # pass, not once per admitted slot
         self._slot_lora = self.lora_bank.lora_idx(self.slot_adapter)
 
+    def _batch_shape_attrs(self, reqs, value) -> dict:
+        """Span attrs describing a batch's rank shape: ``max_rank`` plus,
+        in bucketed mode, per-rank-bucket sums of ``value(req)`` — the
+        exact inputs the bucketed cost-model methods take."""
+        from repro.lora.bank import rank_bucket
+        ranks = [self.adapter_ranks[r.adapter_id] for r in reqs]
+        attrs = {"max_rank": max(ranks), "bank_mode": self.bank_mode}
+        if self.bank_mode == "bucketed":
+            buckets: Dict[int, int] = {}
+            for r, req in zip(ranks, reqs):
+                b = rank_bucket(max(1, r))
+                buckets[b] = buckets.get(b, 0) + value(req)
+            attrs["buckets"] = buckets
+        return attrs
+
     def _prefill_group(self, length: int, grp) -> None:
+        t0 = self._clock()
         n = len(grp)
         aidx = []
         for slot, req in grp:
@@ -324,8 +346,15 @@ class ServingEngine:
             req.slot = slot
             req.output.append(int(firsts[i]))
             req.t_first_token = t
+            req.prefill_start = t0
             req.prefill_done = t
             self.slots[slot] = req
+        if self.tracer is not None:
+            reqs = [req for _, req in grp]
+            attrs = self._batch_shape_attrs(reqs, lambda r: length)
+            attrs.update(tokens=n * length, batch=n)
+            self.tracer.record("prefill", t0, t, cat="iteration",
+                               track=self._track, attrs=attrs)
 
     def _finish_token(self, slot: int, req: ServeRequest, token: int,
                       now: float) -> None:
@@ -353,6 +382,8 @@ class ServingEngine:
     def _decode_once(self) -> None:
         if not any(s is not None for s in self.slots):
             return
+        t0 = self._clock()
+        active = [r for r in self.slots if r is not None]
         with self._ctx():
             logits, self.cache = self._decode(
                 self.params, self.cache, self.last_token, self.bank,
@@ -360,9 +391,14 @@ class ServingEngine:
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.last_token = nxt
         self.decode_dispatches += 1
-        now = self._clock()
         # analysis: ignore[host-sync] the iteration's single sync point
         nxt_np = np.asarray(nxt)
+        now = self._clock()
+        if self.tracer is not None:
+            attrs = self._batch_shape_attrs(active, lambda r: 1)
+            attrs.update(batch=len(active), steps=1, iters=1)
+            self.tracer.record("decode", t0, now, cat="iteration",
+                               track=self._track, attrs=attrs)
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -410,6 +446,7 @@ class ServingEngine:
         timestamp granularity are coarser."""
         if not any(s is not None for s in self.slots):
             return 0
+        t0 = self._clock()
         left = [0] * self.max_batch
         for slot, req in enumerate(self.slots):
             if req is None:
@@ -432,6 +469,12 @@ class ServingEngine:
         # analysis: ignore[host-sync] ONE sync per k tokens, by design
         toks_np = np.asarray(toks)
         now = self._clock()
+        if self.tracer is not None:
+            active = [r for r in self.slots if r is not None]
+            attrs = self._batch_shape_attrs(active, lambda r: 1)
+            attrs.update(batch=len(active), steps=k, iters=k)
+            self.tracer.record("decode", t0, now, cat="iteration",
+                               track=self._track, attrs=attrs)
         for step in range(k):
             for slot, req in enumerate(self.slots):
                 if req is None or step >= left[slot]:

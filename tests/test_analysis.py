@@ -217,6 +217,44 @@ def test_nested_sync_fn_inside_async_not_flagged():
         """) == []
 
 
+def test_raw_log_print_and_logging_calls():
+    rules = _rules("""
+        def route(self, req):
+            print("routing", req)
+            logging.info("routed %s", req)
+            logger.debug("detail")
+            return req
+        """)
+    assert rules.count("raw-log") == 3
+
+
+def test_raw_log_exempt_in_launch_cli():
+    src = textwrap.dedent("""
+        def main():
+            print("served OK")
+        """)
+    assert [f.rule for f in lint_source(
+        src, path="src/repro/launch/serve.py")] == []
+    assert "raw-log" in [f.rule for f in lint_source(
+        src, path="src/repro/serving/cluster.py")]
+
+
+def test_raw_log_suppression_marker():
+    assert _rules("""
+        def dump(self):
+            print("state")  # analysis: ignore[raw-log] debug escape hatch
+        """) == []
+
+
+def test_raw_log_quiet_on_unrelated_calls():
+    # method named .info()/.log() on a non-logger object must not trip
+    assert _rules("""
+        def snapshot(self):
+            self.hub.observe_completion(req, now)
+            return math.log(2.0)
+        """) == []
+
+
 def test_suppression_same_line_and_line_above():
     assert _rules("""
         @jax.jit

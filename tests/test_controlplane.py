@@ -100,6 +100,55 @@ def test_detector_synthetic_shapes():
     assert not det2.events_for("flat")
 
 
+# -- telemetry primitives ----------------------------------------------
+
+def test_sliding_window_rate_divides_by_elapsed_not_now():
+    """Regression: early-window rates used ``now`` as the divisor,
+    assuming the clock started at 0 — a feed starting late (engine wall
+    clock, offset-arrival trace) had its rates silently deflated."""
+    from repro.controlplane.telemetry import SlidingWindow
+    w = SlidingWindow(horizon=30.0)
+    assert w.rate(100.0) == 0.0            # never pushed
+    w.push(100.0, 50.0)
+    w.push(105.0, 50.0)
+    # 100 tokens over the 10s actually covered, not over 110s of clock
+    assert w.rate(110.0) == pytest.approx(10.0)
+    # once the window is saturated the divisor is the horizon
+    w.push(140.0, 60.0)
+    assert w.rate(145.0) == pytest.approx(w.total(145.0) / 30.0)
+    # degenerate zero-elapsed feed must not divide by zero
+    w2 = SlidingWindow(horizon=30.0)
+    w2.push(7.0, 5.0)
+    assert w2.rate(7.0) == pytest.approx(5.0)
+
+
+def test_histogram_prometheus_bucket_semantics():
+    from repro.controlplane.telemetry import Histogram
+    h = Histogram(bounds=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.1, 0.5, 5.0, 100.0):
+        h.observe(v)
+    # `le` is inclusive: 0.1 lands in the 0.1 bucket
+    assert list(h.cumulative()) == [(0.1, 2), (1.0, 3), (10.0, 4),
+                                    ("+Inf", 5)]
+    assert h.count == 5 and h.sum == pytest.approx(105.65)
+    d = h.to_dict()
+    assert d["buckets"][-1] == ("+Inf", 5) and d["count"] == 5
+
+
+def test_hub_feeds_latency_histograms():
+    hub = TelemetryHub(window=5.0)
+    for i in range(4):
+        hub.observe_completion(
+            ServeRequest(req_id=i, adapter_id="a", arrival=0.0,
+                         output_len=5, prefill_done=0.3, finish=1.0),
+            float(i))
+    snap = hub.snapshot(100.0)
+    # windowed percentiles aged out; cumulative histograms did not
+    assert snap["ttft_p95"] is None
+    assert snap["ttft_hist"]["count"] == 4
+    assert snap["tbt_hist"]["count"] == 4
+
+
 # -- SLO tracker -------------------------------------------------------
 
 def test_slo_tracker_windowed_attainment():
