@@ -11,14 +11,16 @@ import os
 import sys
 import time
 
-from . import (bench_ablation, bench_autoscale, bench_interference,
-               bench_kernels, bench_mesh, bench_obs, bench_placement,
-               bench_rank_skew, bench_roofline, bench_scalability,
-               bench_server, bench_transfer, bench_workloads)
+from . import (bench_ablation, bench_autoscale, bench_chaos,
+               bench_interference, bench_kernels, bench_mesh, bench_obs,
+               bench_placement, bench_rank_skew, bench_roofline,
+               bench_scalability, bench_server, bench_transfer,
+               bench_workloads)
 from .common import fmt_rows
 
 BENCHES = {
     "autoscale": bench_autoscale.run,
+    "chaos": bench_chaos.run,
     "interference": lambda fast: bench_interference.run(),
     "transfer": bench_transfer.run,
     # "kernel" (the old bench_kernel.py) was folded into "kernels":

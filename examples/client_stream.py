@@ -20,29 +20,73 @@ import argparse
 import http.client
 import json
 import os
+import random
 import signal
 import subprocess
 import sys
 import time
 
-
-def request(host, port, method, path, body=None):
-    conn = http.client.HTTPConnection(host, port, timeout=30)
-    conn.request(method, path,
-                 json.dumps(body) if body is not None else None,
-                 {"Content-Type": "application/json"})
-    resp = conn.getresponse()
-    data = resp.read()
-    conn.close()
-    return resp.status, json.loads(data) if data else {}
+# polite-client backoff for 429 (admission refused) and 503 (draining /
+# recovering): honor the server's Retry-After when present, otherwise
+# exponential backoff, always with jitter so a fleet of clients never
+# retries in lockstep
+RETRY_STATUSES = (429, 503)
+MAX_RETRIES = 6
+BASE_BACKOFF = 0.1
 
 
-def stream_completion(host, port, payload):
-    """POST /v1/completions and yield each SSE data frame as a dict."""
-    conn = http.client.HTTPConnection(host, port, timeout=60)
-    conn.request("POST", "/v1/completions", json.dumps(payload),
-                 {"Content-Type": "application/json"})
-    resp = conn.getresponse()
+def _retry_delay(attempt: int, retry_after, rng) -> float:
+    """Server-suggested delay if given, else capped exponential —
+    both jittered by up to +25%."""
+    if retry_after is not None:
+        try:
+            base = max(0.001, float(retry_after))
+        except ValueError:
+            base = BASE_BACKOFF
+    else:
+        base = min(2.0, BASE_BACKOFF * (2 ** attempt))
+    return base * (1.0 + 0.25 * rng.random())
+
+
+def request(host, port, method, path, body=None, rng=None):
+    rng = rng or random.Random()
+    for attempt in range(MAX_RETRIES + 1):
+        conn = http.client.HTTPConnection(host, port, timeout=30)
+        conn.request(method, path,
+                     json.dumps(body) if body is not None else None,
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        data = resp.read()
+        retry_after = resp.getheader("Retry-After")
+        conn.close()
+        if resp.status in RETRY_STATUSES and attempt < MAX_RETRIES:
+            delay = _retry_delay(attempt, retry_after, rng)
+            print(f"  {resp.status} on {method} {path}: "
+                  f"retrying in {delay:.3f}s")
+            time.sleep(delay)
+            continue
+        return resp.status, json.loads(data) if data else {}
+
+
+def stream_completion(host, port, payload, rng=None):
+    """POST /v1/completions and yield each SSE data frame as a dict.
+    Backs off (honoring Retry-After) on 429/503 before streaming."""
+    rng = rng or random.Random()
+    for attempt in range(MAX_RETRIES + 1):
+        conn = http.client.HTTPConnection(host, port, timeout=60)
+        conn.request("POST", "/v1/completions", json.dumps(payload),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        if resp.status in RETRY_STATUSES and attempt < MAX_RETRIES:
+            retry_after = resp.getheader("Retry-After")
+            resp.read()
+            conn.close()
+            delay = _retry_delay(attempt, retry_after, rng)
+            print(f"  {resp.status} on completion: "
+                  f"retrying in {delay:.3f}s")
+            time.sleep(delay)
+            continue
+        break
     assert resp.status == 200, (resp.status, resp.read())
     while True:
         line = resp.fp.readline()

@@ -65,11 +65,24 @@ def check_store_invariants(store, now: float = 0.0,
     (e.g. tests pre-loading a link via ``begin_transfer``), so only the
     ``slots >= plans`` direction is checked there."""
     errs: List[str] = []
+    failed = getattr(store, "failed", set())
+    lost = getattr(store, "lost", set())
     for aid in sorted(store.meta):
         holders = store.index.get(aid, set())
         if not holders:
-            errs.append(f"min-copy: adapter {aid!r} has zero HBM copies "
-                        f"cluster-wide")
+            # fault plane: a crash can legitimately kill the last HBM
+            # copy — the adapter is *recovering* (not breached) while a
+            # re-warm fetch is in flight, a host-tier copy survives on a
+            # live server, or the durable SSD tier owns it (store.lost)
+            recovering = (
+                aid in lost
+                or store.inflight_count(aid) > 0
+                or any(aid in store.host_cache[s]
+                       for s in range(store.n_servers)
+                       if s not in failed))
+            if not recovering:
+                errs.append(f"min-copy: adapter {aid!r} has zero HBM "
+                            f"copies cluster-wide")
         for s in holders:
             if s >= store.n_servers or aid not in store.local[s]:
                 errs.append(f"index-consistent: index says {aid!r} on "
@@ -102,6 +115,15 @@ def check_store_invariants(store, now: float = 0.0,
         if store.inflight_from(s) or store.inflight_to(s):
             errs.append(f"retired-silent: retired server {s} still "
                         f"feeds transfers")
+    for s in sorted(failed):
+        # confirmed-dead silence: a crashed server holds nothing and
+        # neither feeds nor receives transfers until restored
+        if store.local[s] or store.host_cache[s]:
+            errs.append(f"failed-silent: failed server {s} still "
+                        f"holds copies")
+        if store.inflight_from(s) or store.inflight_to(s):
+            errs.append(f"failed-silent: failed server {s} still "
+                        f"feeds transfers")
     net = store.network
     if net is not None:
         live_plans: Dict[int, int] = {}
@@ -120,12 +142,14 @@ def check_store_invariants(store, now: float = 0.0,
                     f"link-occupancy: server {src} egress has {slots} "
                     f"occupied slots but {plans} live in-flight plans")
     if routing is not None:
-        dead = set(routing.blocked) | set(store.retired)
+        # a confirmed-dead (failed) server must never receive a route —
+        # the chaos-plane invariant — alongside the retired-silent one
+        dead = set(routing.blocked) | set(store.retired) | set(failed)
         for aid, entry in sorted(routing._table.items()):
             for sid, phi in entry:
                 if sid in dead:
                     errs.append(f"retired-silent: routing entry for "
-                                f"{aid!r} references retired server "
+                                f"{aid!r} references dead server "
                                 f"{sid}")
                 if phi < -_EPS:
                     errs.append(f"routing: negative phi for {aid!r} on "
@@ -157,6 +181,9 @@ class ModelConfig:
     host_cache_bytes: int = 512 << 20
     store_cls: Optional[type] = None   # test hook: inject a buggy store
     fabric: str = "ib_gdr"
+    enable_crash: bool = False         # crash_server / restore_server
+    enable_stall: bool = False         # fetch_timeout (stall + retry)
+    durable_ssd: bool = False          # SSD recovers last-copy loss
 
 
 @dataclasses.dataclass
@@ -194,7 +221,8 @@ class World:
         self.network = NetworkModel(fabric=cfg.fabric)
         self.store = store_cls(cfg.n_servers, infos,
                                network=self.network,
-                               host_cache_bytes=cfg.host_cache_bytes)
+                               host_cache_bytes=cfg.host_cache_bytes,
+                               durable_ssd=cfg.durable_ssd)
         placement = cfg.seed_placement or {
             aid: {i % cfg.n_servers: 1.0}
             for i, (aid, _) in enumerate(cfg.adapters)}
@@ -216,15 +244,19 @@ class World:
         # finite without hiding interleavings.
         pending = sorted({round(p.eta - self.now, 9)
                           for p in s._inflight.values()
-                          if p.eta > self.now + _EPS})
+                          if self.now + _EPS < p.eta < float("inf")})
         def rel(t: float) -> tuple:
+            if t == float("inf"):     # stalled / retry-wait sentinel
+                return (10 ** 9, -1)
             if t <= self.now + _EPS:
                 return (-1, 0)
             r = round(t - self.now, 9)
             rank = pending.index(r) if r in pending else len(pending)
             return (rank, round((t - self.now) / 1e-3))
         inflight = tuple(sorted(
-            (dest, aid, p.src_server, p.source, rel(p.eta))
+            (dest, aid, p.src_server, p.source, rel(p.eta),
+             p.attempt, p.stalled,
+             rel(p.retry_at) if p.retry_at >= 0 else (-2, 0))
             for (dest, aid), p in s._inflight.items()))
         egress = tuple(sorted(
             (src, tuple(sorted(rel(t) for t in etas if t > self.now
@@ -241,6 +273,7 @@ class World:
             tuple(sorted((aid, tuple(sorted(v)))
                          for aid, v in s.desired.items())),
             tuple(sorted(s.draining)), tuple(sorted(s.retired)),
+            tuple(sorted(s.failed)), tuple(sorted(s.lost)),
             inflight, egress, table,
             tuple(sorted(self.routing.blocked)),
         )
@@ -274,6 +307,17 @@ class World:
                 if not s.local[sid] and not s.inflight_from(sid) \
                         and not s.inflight_to(sid):
                     acts.append((f"retire({sid})", _mk_retire(sid)))
+        if cfg.enable_crash:
+            for sid in live:
+                if len(live) > 1:        # never crash the last server
+                    acts.append((f"crash_server({sid})", _mk_crash(sid)))
+            for sid in sorted(s.failed):
+                acts.append((f"restore_server({sid})", _mk_restore(sid)))
+        if cfg.enable_stall:
+            for (dest, aid), p in sorted(s._inflight.items()):
+                if p.retry_at < 0 and not p.stalled:
+                    acts.append((f"fetch_timeout({dest},{aid})",
+                                 _mk_stall(dest, aid)))
         if s.next_event_time(self.now) is not None:
             acts.append(("advance", _do_advance))
         return acts
@@ -324,6 +368,45 @@ def _mk_retire(sid: int):
     return act
 
 
+def _mk_crash(sid: int):
+    """Confirmed-dead handling, mirroring ``Orchestrator.fail_server``:
+    drop every copy the dead server held, re-place its adapters onto
+    survivors (prefetch re-warms), then block routing — block comes
+    last so renormalization never strands an empty entry."""
+    def act(w: World):
+        live = [x for x in w.store.live_servers() if x != sid]
+        if not live:
+            raise ExpectedRefusal("last live server")
+        w.store.fail_server(sid, now=w.now)
+        placement: Dict[str, Dict[int, float]] = {}
+        for aid, entry in w.routing._table.items():
+            kept = {s: phi for s, phi in entry if s != sid}
+            tot = sum(kept.values())
+            if kept and tot > 0:
+                placement[aid] = {s: phi / tot
+                                  for s, phi in kept.items()}
+            else:
+                placement[aid] = {live[0]: 1.0}
+        w.routing.update(placement)
+        w.store.apply_placement(placement, now=w.now, prefetch=True)
+        w.routing.block_server(sid)
+    return act
+
+
+def _mk_restore(sid: int):
+    def act(w: World):
+        w.store.restore_server(sid)
+        w.routing.unblock_server(sid)
+    return act
+
+
+def _mk_stall(dest: int, aid: str):
+    def act(w: World):
+        if not w.store.stall_transfer(dest, aid):
+            raise ExpectedRefusal("no stallable transfer")
+    return act
+
+
 def _do_advance(w: World):
     t = w.store.next_event_time(w.now)
     if t is None:
@@ -354,6 +437,31 @@ def _drain_terminates(w: World, max_steps: int = 64) -> Optional[str]:
     return None
 
 
+def _fetch_terminates(w: World, max_steps: int = 64) -> Optional[str]:
+    """Liveness probe for the chaos plane: no fetch waits forever. From
+    any state with in-flight transfers, advancing the clock alone must
+    land or retry every one of them to completion — a transfer whose
+    source died must fail over (backoff → alternate source / SSD), not
+    hang."""
+    probe = w.clone()
+    for _ in range(max_steps):
+        if not probe.store._inflight:
+            return None
+        if probe.store.next_event_time(probe.now) is None:
+            break
+        try:
+            _do_advance(probe)
+        except Exception as e:
+            return (f"fetch-liveness: clock advance raised "
+                    f"{type(e).__name__}: {e}")
+    if probe.store._inflight:
+        stuck = sorted(probe.store._inflight)
+        return (f"fetch-liveness: transfers {stuck} still in flight "
+                f"after {max_steps} clock advances — a fetch is "
+                f"waiting forever (dead source never failed over)")
+    return None
+
+
 # --------------------------------------------------------------------------
 # BFS driver
 # --------------------------------------------------------------------------
@@ -371,6 +479,11 @@ def check_model(cfg: ModelConfig,
         errs = world.invariant_errors()
         if cfg.enable_drain and not errs and world.store.draining:
             live = _drain_terminates(world)
+            if live:
+                errs = [live]
+        if (cfg.enable_crash or cfg.enable_stall) and not errs \
+                and world.store._inflight:
+            live = _fetch_terminates(world)
             if live:
                 errs = [live]
         for e in errs:
@@ -451,11 +564,31 @@ def drain_retire_model(store_cls: Optional[type] = None,
         max_depth=max_depth, store_cls=store_cls)
 
 
+def crash_recovery_model(store_cls: Optional[type] = None,
+                         max_depth: int = 8) -> ModelConfig:
+    """2-server/2-adapter chaos model: every interleaving of accesses,
+    crashes of either server (with survivor re-placement + routing
+    block), restores, injected fetch stalls and clock advances. Checks
+    that a confirmed-dead server never receives a route or feeds a
+    transfer, that losing the last HBM copy recovers via SSD instead
+    of breaching min-copy, and (fetch-liveness) that no fetch waits
+    forever on a dead or stalled source — retry must fail over."""
+    return ModelConfig(
+        n_servers=2,
+        adapters=(("a0", 64 << 20), ("a1", 64 << 20)),
+        seed_placement={"a0": {0: 0.5, 1: 0.5}, "a1": {1: 1.0}},
+        max_servers=2, enable_add_server=False, enable_drain=False,
+        enable_crash=True, enable_stall=True, durable_ssd=True,
+        max_depth=max_depth, store_cls=store_cls)
+
+
 def small_model_suite() -> List[Tuple[str, CheckResult]]:
     return [
-        # depths chosen past each model's BFS fixpoint: both results
+        # depths chosen past each model's BFS fixpoint: the first two
         # come back with truncated=False, i.e. the full reachable state
-        # space was explored
+        # space was explored; crash-recovery's fault alphabet keeps
+        # minting fresh retry states, so it is depth-bounded instead
         ("fetch-gc", check_model(fetch_gc_model(max_depth=30))),
         ("drain-retire", check_model(drain_retire_model(max_depth=14))),
+        ("crash-recovery", check_model(crash_recovery_model(max_depth=8))),
     ]

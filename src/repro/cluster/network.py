@@ -22,7 +22,7 @@ adapter data plane (``repro.core.pool.AdapterStore``):
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 # bytes/s bandwidth and seconds of base latency per source
 _SOURCES: Dict[str, tuple] = {
@@ -54,6 +54,10 @@ class NetworkModel:
         self.remote_read_overlap = remote_read_overlap
         # src_server -> ETAs of transfers currently leaving that server
         self._egress: Dict[int, List[float]] = {}
+        # fault state (repro.faults): downed links quote infinite latency
+        # and refuse new transfers; degraded links multiply wire time
+        self._link_down: Set[int] = set()
+        self._link_degrade: Dict[int, float] = {}
 
     def sources(self):
         return sorted(_SOURCES)
@@ -62,6 +66,33 @@ class NetworkModel:
     def transfer_latency(self, nbytes: int, source: str) -> float:
         bw, lat = _SOURCES[source]
         return lat + self.contention * nbytes / bw
+
+    # -- fault state (injected by repro.faults) --------------------------
+    def set_link_down(self, src_server: int) -> None:
+        """Flap a peer's egress link down: in-flight transfers keep
+        their slots (the store's retry path re-sources them), but the
+        link quotes infinite latency and refuses new transfers."""
+        self._link_down.add(src_server)
+
+    def set_link_up(self, src_server: int) -> None:
+        self._link_down.discard(src_server)
+
+    def degrade_link(self, src_server: int, factor: float) -> None:
+        """Multiply the link's wire time by ``factor`` (>= 1); use
+        ``reset_link`` / factor 1.0 to restore full bandwidth."""
+        if factor < 1.0:
+            raise ValueError(f"degrade factor {factor} < 1")
+        self._link_degrade[src_server] = factor
+
+    def reset_link(self, src_server: int) -> None:
+        self._link_down.discard(src_server)
+        self._link_degrade.pop(src_server, None)
+
+    def link_up(self, src_server: int) -> bool:
+        return src_server not in self._link_down
+
+    def link_factor(self, src_server: int) -> float:
+        return self._link_degrade.get(src_server, 1.0)
 
     # -- link state ------------------------------------------------------
     def link_load(self, src_server: int, now: float = 0.0) -> int:
@@ -80,15 +111,20 @@ class NetworkModel:
         (fair-share bandwidth division)."""
         if src_server is None:
             return self.transfer_latency(nbytes, source)
+        if src_server in self._link_down:
+            return float("inf")
         bw, lat = _SOURCES[source]
         load = self.link_load(src_server, now)
-        return lat + (1 + load) * self.contention * nbytes / bw
+        factor = self._link_degrade.get(src_server, 1.0)
+        return lat + factor * (1 + load) * self.contention * nbytes / bw
 
     def begin_transfer(self, nbytes: int, source: str, now: float = 0.0,
                        src_server: Optional[int] = None
                        ) -> Tuple[float, float]:
         """Start a transfer; returns (latency, eta) and — for peer
         sources — occupies the source's egress link until the ETA."""
+        if src_server is not None and src_server in self._link_down:
+            raise RuntimeError(f"transfer from downed link {src_server}")
         latency = self.plan_latency(nbytes, source, now, src_server)
         eta = now + latency
         if src_server is not None:
@@ -100,6 +136,15 @@ class NetworkModel:
         etas = self._egress.get(src_server)
         if etas and eta in etas:
             etas.remove(eta)
+
+    def move_transfer(self, src_server: int, old_eta: float,
+                      new_eta: float) -> None:
+        """Re-time an occupied link slot (a stalled transfer keeps its
+        slot, so link-occupancy accounting stays exact)."""
+        etas = self._egress.get(src_server)
+        if etas and old_eta in etas:
+            etas.remove(old_eta)
+            etas.append(new_eta)
 
     # -- remote-read access mode ----------------------------------------
     def remote_read_penalty(self, nbytes: int,

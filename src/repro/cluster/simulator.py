@@ -34,6 +34,11 @@ from repro.core.demand import DemandEstimator
 from repro.core.pool import AdapterStore, runtime_checks_enabled
 from repro.core.routing import RoutingTable
 from repro.core.types import AdapterInfo, PlacementContext
+from repro.faults.plan import (KIND_CRASH, KIND_LINK_DEGRADE,
+                               KIND_LINK_DOWN, KIND_LINK_UP,
+                               KIND_RESTORE, KIND_STALL_FETCH)
+from repro.faults.recovery import (RecoveryRecord, make_continuation,
+                                   merge_continuation, remaining_tokens)
 
 from .costmodel import ServerModel, profile_operating_points
 from .network import NetworkModel
@@ -71,6 +76,14 @@ class SimResult:
     cost_drift: dict = dataclasses.field(default_factory=dict)
     trace_spans: int = 0
     flight_dumps: int = 0
+    # chaos plane (fault_plan runs only)
+    server_failures: int = 0
+    recoveries: int = 0
+    redispatched: int = 0            # stranded requests re-issued
+    fetch_retries: int = 0
+    fetch_timeouts: int = 0
+    breaker_opens: int = 0
+    recovery_records: List = dataclasses.field(default_factory=list)
 
     def _eligible(self):
         return [r for r in self.requests if r.arrival >= self.warmup]
@@ -132,7 +145,11 @@ class ClusterSimulator:
                  network: Optional[NetworkModel] = None,
                  controller=None,
                  provision_delay: float = 0.0,
-                 tracer=None, flight_recorder=None):
+                 tracer=None, flight_recorder=None,
+                 fault_plan=None,
+                 detector_window: float = 0.5,
+                 durable_ssd: bool = False,
+                 retry_policy=None):
         if access_mode not in ("migrate", "remote-read"):
             raise ValueError(f"unknown access_mode {access_mode!r}")
         self.warmup = warmup
@@ -159,6 +176,14 @@ class ClusterSimulator:
         # observability: span tracing on the event clock, per-phase
         # modeled-vs-measured drift, and flight-recorder dumps on
         # controller scale decisions / timeouts
+        # chaos plane: seeded fault schedule on the event clock; crashes
+        # are detected after one heartbeat window (the wall-clock facade
+        # runs a real FailureDetector — here detection latency is
+        # modeled directly as `detector_window` seconds of silence)
+        self.fault_plan = fault_plan
+        self.detector_window = detector_window
+        self.durable_ssd = durable_ssd
+        self.retry_policy = retry_policy
         self.tracer = tracer
         self.flight_recorder = flight_recorder
         self.cost_drift = None
@@ -205,7 +230,9 @@ class ClusterSimulator:
             operating_points=self.operating_points)
         placement = self.policy.place(ctx)
         router = RoutingTable(placement, seed=self.seed)
-        pool = AdapterStore(self.n, self.adapters, self.network)
+        pool = AdapterStore(self.n, self.adapters, self.network,
+                            retry=self.retry_policy,
+                            durable_ssd=self.durable_ssd)
         pool.tracer = tracer
         pool.seed(placement)
         max_adapters = pool.max_adapters_per_server()
@@ -218,6 +245,16 @@ class ClusterSimulator:
         scale_ups = drains = retires = 0
         timed_out = 0
         last_rb = 0.0
+        # chaos plane: crashed servers freeze (fail-stop — stranded work
+        # neither runs nor times out) until detection one heartbeat
+        # window later; recovery re-places adapters and re-dispatches
+        # stranded requests as same-req_id continuations
+        failed: Set[int] = set()            # crashed (detected or not)
+        dead_detected: Set[int] = set()     # recovery already ran
+        failed_at: Dict[int, float] = {}
+        cont_orig: Dict[int, SimRequest] = {}   # req_id -> original
+        server_failures = recoveries = redispatched_n = 0
+        recovery_records: List = []
 
         # event heap entries: (time, seq, kind, payload)
         heap: list = []
@@ -234,6 +271,11 @@ class ClusterSimulator:
             heapq.heappush(heap, (ctrl.config.tick_period, seq,
                                   "ctick", None))
             seq += 1
+        if self.fault_plan is not None:
+            self.fault_plan.reset()
+            for ev in self.fault_plan.events:
+                heapq.heappush(heap, (ev.time, seq, "fault", ev))
+                seq += 1
 
         def schedule_server(s: SimServer, now: float):
             nonlocal seq
@@ -276,6 +318,12 @@ class ClusterSimulator:
                 if not s.finished:
                     continue
                 for r in s.finished:
+                    # a finished continuation folds back into the
+                    # original trace object (same req_id, full output)
+                    orig = cont_orig.pop(r.req_id, None)
+                    if orig is not None and orig is not r:
+                        merge_continuation(orig, r)
+                        r = orig
                     if ctrl is not None:
                         ctrl.observe_completion(r, r.finish)
                     if record_spans is not None:
@@ -355,6 +403,152 @@ class ClusterSimulator:
                     draining.discard(a.server)
                     retired_at[a.server] = now
 
+        def dispatch(req: SimRequest, now: float) -> int:
+            """Route + enqueue one request (fresh arrival or recovery
+            continuation) on the currently-active fleet."""
+            if self.policy.replicate_all:
+                sid = min(sorted(active),
+                          key=lambda i: servers[i].estimated_work(now))
+                router.request_counts[req.adapter_id] = \
+                    router.request_counts.get(req.adapter_id, 0) + 1
+                req.ready = now
+                req.fetch_latency = 0.0
+            else:
+                sid, entry = router.route_detailed(
+                    req.adapter_id,
+                    tokens=req.prompt_len + req.output_len)
+                plan = pool.plan_access(
+                    sid, req.adapter_id, now=now,
+                    access_mode=self.access_mode,
+                    preferred_peers=[s for s, _ in entry])
+                req.apply_fetch_plan(plan, now)
+                if not plan.hit:
+                    push_fetch(plan.eta)
+            req.server = sid
+            req.rank = self.meta[req.adapter_id].rank
+            servers[sid].enqueue(req)
+            schedule_server(servers[sid], now)
+            return sid
+
+        def redispatch(req: SimRequest, now: float) -> bool:
+            """Exactly-once re-dispatch of a stranded request: issue a
+            same-``req_id`` continuation for the undelivered suffix on
+            a survivor; a request that already decoded every token is
+            finalized in place."""
+            nonlocal redispatched_n, timed_out
+            orig = cont_orig.pop(req.req_id, None)
+            if orig is not None and orig is not req:
+                # a continuation itself stranded: fold its progress back
+                # and re-continue from the original
+                merge_continuation(orig, req)
+                orig.finish = -1.0
+                req = orig
+            if remaining_tokens(req) <= 0:
+                req.finish = now
+                if req.prefill_done < 0:
+                    req.prefill_done = now
+                if ctrl is not None:
+                    ctrl.observe_completion(req, now)
+                return False
+            cont = make_continuation(req, now)
+            cont_orig[cont.req_id] = req
+            dispatch(cont, now)
+            redispatched_n += 1
+            return True
+
+        def recover(sid: int, now: float):
+            """Detection fired one heartbeat window after the crash:
+            block routing, re-place the dead server's adapters onto
+            survivors (prefetch re-warms, SSD recovers last-copy loss
+            when ``durable_ssd``), re-dispatch its stranded requests."""
+            nonlocal recoveries
+            feed_completions()
+            s = servers[sid]
+            stranded = list(s.waiting) + list(s.running)
+            s.waiting.clear()
+            s.running.clear()
+            s.busy_until = 0.0
+            active.discard(sid)
+            draining.discard(sid)
+            orphans = pool.fail_server(sid, now)
+            keep_prefetch = self.prefetch
+            self.prefetch = True      # recovery re-warm is never lazy
+            try:
+                do_rebalance(now)
+            finally:
+                self.prefetch = keep_prefetch
+            router.block_server(sid)
+            dead_detected.add(sid)
+            if ctrl is not None and hasattr(ctrl, "observe_failure"):
+                ctrl.observe_failure(sid, now)
+            redone = 0
+            for req in sorted(stranded, key=lambda r: r.req_id):
+                if redispatch(req, now):
+                    redone += 1
+            recoveries += 1
+            recovery_records.append(RecoveryRecord(
+                server=sid, detected_at=now, recovered_at=now,
+                redispatched=redone, orphaned_adapters=len(orphans)))
+            if recorder is not None:
+                recorder.dump("fault-recover", now,
+                              {"server": sid, "stranded": len(stranded),
+                               "redispatched": redone,
+                               "orphans": len(orphans),
+                               "crashed_at": failed_at.get(sid, now)})
+
+        def apply_fault(ev, now: float):
+            """One FaultPlan event on the sim's virtual clock. Crash
+            semantics are fail-stop: the backend freezes immediately,
+            but placement/routing only learn at detection."""
+            nonlocal server_failures, seq
+            sid = ev.target
+            if ev.kind == KIND_CRASH:
+                if not (0 <= sid < len(servers)) or sid in failed \
+                        or sid in retired_at:
+                    return
+                failed.add(sid)
+                failed_at[sid] = now
+                server_failures += 1
+                push(now + self.detector_window, "recover", sid)
+                if recorder is not None:
+                    recorder.dump("fault-crash", now, {"server": sid})
+            elif ev.kind == KIND_RESTORE:
+                if sid in failed and sid not in dead_detected:
+                    # flapped back inside the detection window: frozen
+                    # work simply resumes, no recovery ran
+                    failed.discard(sid)
+                    failed_at.pop(sid, None)
+                    schedule_server(servers[sid], now)
+                elif sid in dead_detected:
+                    failed.discard(sid)
+                    dead_detected.discard(sid)
+                    pool.restore_server(sid)
+                    router.unblock_server(sid)
+                    active.add(sid)
+                    do_rebalance(now)   # fold the survivor back in
+                if recorder is not None:
+                    recorder.dump("fault-restore", now, {"server": sid})
+            elif ev.kind == KIND_LINK_DOWN:
+                self.network.set_link_down(sid)
+            elif ev.kind == KIND_LINK_UP:
+                self.network.set_link_up(sid)
+                self.network.reset_link(sid)
+            elif ev.kind == KIND_LINK_DEGRADE:
+                self.network.degrade_link(sid, max(1.0, ev.arg))
+            elif ev.kind == KIND_STALL_FETCH:
+                for (dest, aid), p in sorted(pool._inflight.items()):
+                    if p.retry_at >= 0 or p.stalled:
+                        continue
+                    if sid >= 0 and dest != sid and p.src_server != sid:
+                        continue
+                    pool.stall_transfer(
+                        dest, aid,
+                        ev.arg if ev.arg > 0 else float("inf"))
+                    t = pool.next_event_time(now)
+                    if t is not None:
+                        push_fetch(t)   # drive the timeout/retry path
+                    break
+
         now = 0.0
         last_activity = 0.0
         # REPRO_CHECK_INVARIANTS=1: re-check the protocol checker's
@@ -380,36 +574,48 @@ class ClusterSimulator:
             if kind == "arrival":
                 req: SimRequest = payload
                 remaining_arrivals -= 1
-                if self.policy.replicate_all:
-                    sid = min(sorted(active),
-                              key=lambda i: servers[i].estimated_work(now))
-                    router.request_counts[req.adapter_id] = \
-                        router.request_counts.get(req.adapter_id, 0) + 1
-                    req.ready = now
-                    req.fetch_latency = 0.0
-                else:
-                    sid, entry = router.route_detailed(
-                        req.adapter_id,
-                        tokens=req.prompt_len + req.output_len)
-                    plan = pool.plan_access(
-                        sid, req.adapter_id, now=now,
-                        access_mode=self.access_mode,
-                        preferred_peers=[s for s, _ in entry])
-                    req.apply_fetch_plan(plan, now)
-                    if not plan.hit:
-                        push_fetch(plan.eta)
-                req.server = sid
-                req.rank = self.meta[req.adapter_id].rank
-                servers[sid].enqueue(req)
+                sid = dispatch(req, now)
                 tokens = req.prompt_len + req.output_len
                 window_tokens[req.adapter_id] = \
                     window_tokens.get(req.adapter_id, 0.0) + tokens
                 if ctrl is not None:
                     ctrl.observe_arrival(req.adapter_id, sid, tokens, now)
-                schedule_server(servers[sid], now)
             elif kind == "fetch":
-                pool.poll(now)
+                for p in pool.poll(now):
+                    # the retry path moves landings past the ETA
+                    # stamped at dispatch (a stalled attempt even
+                    # quotes eta=inf to coalescing requests): now that
+                    # the copy actually landed, re-stamp any request
+                    # still waiting on the stale quote and wake the
+                    # server, or it blocks forever on a time that
+                    # never comes
+                    if p.dest >= len(servers):
+                        continue
+                    s = servers[p.dest]
+                    woke = False
+                    for r in s.waiting:
+                        if r.adapter_id == p.adapter_id and \
+                                r.ready > now + 1e-12:
+                            r.fetch_latency = max(0.0, now - r.arrival)
+                            r.ready = now
+                            woke = True
+                    if woke:
+                        schedule_server(s, now)
+                # retries (timeout -> backoff -> relaunch) move the next
+                # wakeup off any plan's original eta: chain the next
+                # pending store event so the retry path always fires
+                t = pool.next_event_time(now)
+                if t is not None and t > now + 1e-12:
+                    push_fetch(t)
+            elif kind == "fault":
+                apply_fault(payload, now)
+            elif kind == "recover":
+                if payload in failed and payload not in dead_detected:
+                    recover(payload, now)
             elif kind == "server":
+                if payload in failed:
+                    continue    # fail-stop freeze: nothing runs, and
+                    #             stranded work does not time out
                 s = servers[payload]
                 if s.busy_until > now + 1e-12:
                     push(s.busy_until, "server", s.sid)
@@ -439,7 +645,16 @@ class ClusterSimulator:
             elif kind == "rebalance":
                 rebalances += 1
                 do_rebalance(now)
-                if work_remains():
+                # reschedule only while *request* work remains. The
+                # work_remains() predicate also counts in-flight
+                # transfers — including the ones do_rebalance itself
+                # just launched — so gating on it lets a near-zero
+                # demand window ping-pong placement forever after the
+                # trace drains (each rebalance's own transfers keep the
+                # next one alive). Transfers complete through the fetch
+                # event chain regardless.
+                if remaining_arrivals > 0 or \
+                        any(s.waiting or s.running for s in servers):
                     push(now + self.rebalance_period, "rebalance")
             elif kind == "ctick":
                 feed_completions()
@@ -521,6 +736,13 @@ class ClusterSimulator:
                         if self.cost_drift is not None else {}),
             trace_spans=tracer.n_spans if tracer is not None else 0,
             flight_dumps=recorder.n_dumps if recorder is not None else 0,
+            server_failures=server_failures,
+            recoveries=recoveries,
+            redispatched=redispatched_n,
+            fetch_retries=pool.fetch_retries,
+            fetch_timeouts=pool.fetch_timeouts,
+            breaker_opens=sum(b.opens for b in pool.breakers.values()),
+            recovery_records=recovery_records,
         )
 
 

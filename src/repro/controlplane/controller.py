@@ -102,6 +102,7 @@ class ClusterController:
         # decision inputs of the most recent tick — the flight
         # recorder's audit record for scale/drain/SLO-violation dumps
         self.last_inputs: dict = {}
+        self.server_failures: List = []   # (server, now) crash log
         self._bad_ticks = 0
         self._good_ticks = 0
         self._last_scale = -float("inf")
@@ -120,6 +121,14 @@ class ClusterController:
     def observe_timeout(self, now: float) -> None:
         self.telemetry.observe_timeout(now)
         self.slo.observe_timeout(now)
+
+    def observe_failure(self, server: int, now: float) -> None:
+        """Chaos plane: a server was confirmed dead and recovered
+        around. Capacity just dropped out from under the SLO window, so
+        the scale-down comfort streak resets — the controller must not
+        drain a survivor on pre-crash telemetry."""
+        self.server_failures.append((server, now))
+        self._good_ticks = 0
 
     # -- introspection ----------------------------------------------------
     def drift_events(self) -> List[DriftEvent]:
@@ -161,6 +170,7 @@ class ClusterController:
             "windowed_p95_ttft": self.telemetry.ttft_percentile(95, now),
             "demand_servers": self.demand_servers(now),
             "drift_events": [dataclasses.asdict(e) for e in new_drift],
+            "server_failures": len(self.server_failures),
         }
         if violated:
             self._bad_ticks += 1

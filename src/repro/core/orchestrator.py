@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .baselines import POLICIES
 from .demand import DemandEstimator
-from .pool import AdapterStore, FetchPlan
+from .pool import AdapterStore, FetchPlan, FetchRetryPolicy
 from .routing import RoutingTable
 from .types import AdapterInfo, Placement, PlacementContext
 
@@ -26,7 +26,9 @@ class ClusterOrchestrator:
                  operating_points: Dict[int, float],
                  policy: str = "loraserve", network=None, seed: int = 0,
                  access_mode: str = "migrate", prefetch: bool = False,
-                 sync_store: bool = True):
+                 sync_store: bool = True,
+                 retry: Optional["FetchRetryPolicy"] = None,
+                 durable_ssd: bool = False):
         if access_mode not in ("migrate", "remote-read"):
             raise ValueError(f"unknown access_mode {access_mode!r}")
         # sync_store: legacy clock-less callers (route()/end_of_timestep
@@ -59,7 +61,9 @@ class ClusterOrchestrator:
         self.router = RoutingTable(self.placement, seed=seed)
         # one AdapterStore; `pool` kept as the legacy name
         self.store = self.pool = AdapterStore(n_servers, adapters,
-                                              network)
+                                              network, retry=retry,
+                                              durable_ssd=durable_ssd,
+                                              retry_seed=seed)
         self.store.seed(self.placement)
         self._window_tokens: Dict[str, float] = {}
 
@@ -221,3 +225,41 @@ class ClusterOrchestrator:
         self.router.block_server(server_id)
         self.draining.discard(server_id)
         self.active.remove(server_id)
+
+    # -- fault plane (repro.faults crash -> recover -> restore) ------------
+    def fail_server(self, server_id: int,
+                    now: float = 0.0) -> List[FetchPlan]:
+        """Crash-triggered recovery, ordered so every intermediate state
+        is consistent: (1) the store drops the dead server's copies and
+        re-sources its transfers, (2) placement re-solves over the
+        survivors and the routing table updates (entries no longer
+        reference the dead server), (3) the server is blocked so a stale
+        route raises instead of dispatching. Orphaned adapters re-warm
+        via prefetch onto survivors (from host cache, a surviving peer,
+        or the durable SSD tier). Returns the recovery fetch plans."""
+        if server_id in self.draining:
+            self.draining.discard(server_id)
+        if server_id not in self.active:
+            raise RuntimeError(f"crash of unknown/retired server "
+                               f"{server_id}")
+        self.store.fail_server(server_id, now=now)
+        self.active.remove(server_id)
+        prefetch, self.prefetch = self.prefetch, True
+        try:
+            plans = self._resolve(now)
+        finally:
+            self.prefetch = prefetch
+        self.router.block_server(server_id)
+        return plans
+
+    def restore_server(self, server_id: int, now: float = 0.0) -> None:
+        """Bring a crashed server back (empty): unblock routing, rejoin
+        the active fleet, and re-solve placement so copies re-warm onto
+        it."""
+        if server_id in self.active:
+            return
+        self.store.restore_server(server_id)
+        self.router.unblock_server(server_id)
+        self.active.append(server_id)
+        self.active.sort()
+        self._resolve(now)

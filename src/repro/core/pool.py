@@ -38,7 +38,9 @@ that transfer lands.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
+import random
 from typing import Dict, List, Optional, Set, Tuple
 
 from .types import AdapterInfo, Placement
@@ -58,6 +60,63 @@ TIER_HOST = "host"
 TIER_PEER = "peer"
 TIER_SSD = "ssd"
 
+_INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class FetchRetryPolicy:
+    """Timeout/retry knobs for in-flight transfers (repro.faults).
+
+    A healthy transfer lands exactly at its modeled ETA, so the
+    per-attempt deadline is ``eta + timeout`` — it only fires when the
+    transfer was stalled or its source died. Retries back off
+    exponentially with multiplicative jitter (seeded, deterministic)
+    and re-pick the cheapest *surviving* source, so a dead GDR peer
+    falls back to host cache or the SSD tier."""
+    timeout: float = 0.25        # grace beyond the modeled ETA (s)
+    base_backoff: float = 0.02   # first retry delay (s)
+    max_backoff: float = 1.0     # backoff cap (s)
+    jitter: float = 0.25         # multiplicative jitter fraction
+    max_attempts: int = 12       # loud failure past this many retries
+
+    def backoff(self, attempt: int, rng: random.Random) -> float:
+        base = min(self.max_backoff, self.base_backoff * (2 ** attempt))
+        return base * (1.0 + self.jitter * rng.random())
+
+
+class CircuitBreaker:
+    """Per-peer fetch-source breaker: closed -> open after
+    ``threshold`` consecutive failures, half-open after ``cooldown``
+    seconds (one probe transfer allowed), closed again on success."""
+
+    def __init__(self, threshold: int = 3, cooldown: float = 1.0):
+        self.threshold = threshold
+        self.cooldown = cooldown
+        self.state = "closed"
+        self.failures = 0
+        self.open_until = -_INF
+        self.opens = 0
+
+    def allows(self, now: float) -> bool:
+        if self.state == "open":
+            if now + 1e-12 >= self.open_until:
+                self.state = "half-open"
+            else:
+                return False
+        return True
+
+    def record_failure(self, now: float) -> None:
+        self.failures += 1
+        if self.state == "half-open" or self.failures >= self.threshold:
+            self.state = "open"
+            self.open_until = now + self.cooldown
+            self.failures = 0
+            self.opens += 1
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+
 
 @dataclasses.dataclass
 class FetchPlan:
@@ -74,6 +133,14 @@ class FetchPlan:
     token_penalty: float = 0.0   # per-iteration remote-read surcharge
     read_peer: int = -1          # peer serving remote reads (remote-read)
     coalesced: bool = False      # joined an already-in-flight transfer
+    # retry state (repro.faults): a transfer that blows its deadline or
+    # loses its source backs off, then relaunches from a new source
+    started: float = 0.0         # when the current attempt started
+    deadline: float = _INF       # current attempt must land by this
+    link_eta: float = 0.0        # eta registered with the network link
+    attempt: int = 0             # completed (failed) attempts so far
+    retry_at: float = -1.0       # >= 0: waiting out backoff until this
+    stalled: bool = False        # an injector froze this transfer
 
     @property
     def blocking(self) -> bool:
@@ -84,7 +151,12 @@ class FetchPlan:
 class AdapterStore:
     def __init__(self, n_servers: int, adapters: List[AdapterInfo],
                  network=None, *, host_cache_bytes: int = 512 << 20,
-                 ssd_spill: bool = True):
+                 ssd_spill: bool = True,
+                 retry: Optional[FetchRetryPolicy] = None,
+                 durable_ssd: bool = False,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown: float = 1.0,
+                 retry_seed: int = 0):
         self.n_servers = n_servers
         self.meta: Dict[str, AdapterInfo] = {a.adapter_id: a
                                              for a in adapters}
@@ -105,6 +177,17 @@ class AdapterStore:
         # out of the cluster entirely, ids never reused
         self.draining: Set[int] = set()
         self.retired: Set[int] = set()
+        # fault plane (repro.faults): crashed servers lose every copy
+        # instantly; ``lost`` tracks adapters whose last HBM/host copy
+        # died and are recoverable only from the durable SSD tier
+        self.failed: Set[int] = set()
+        self.lost: Set[str] = set()
+        self.retry = retry or FetchRetryPolicy()
+        self.durable_ssd = durable_ssd
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown = breaker_cooldown
+        self.breakers: Dict[int, CircuitBreaker] = {}
+        self._rng = random.Random(retry_seed)
         # telemetry
         self.fetches = 0
         self.fetch_bytes = 0
@@ -115,6 +198,9 @@ class AdapterStore:
         self.host_hits = 0
         self.ssd_fetches = 0
         self.drain_fetches = 0
+        self.fetch_retries = 0
+        self.fetch_timeouts = 0
+        self.ssd_recoveries = 0
         # obs.Tracer (host-attached): every started transfer emits a
         # "transfer" span on the store track, start -> modeled ETA
         self.tracer = None
@@ -240,7 +326,125 @@ class AdapterStore:
         self.retired.add(server_id)
 
     def live_servers(self) -> List[int]:
-        return [s for s in range(self.n_servers) if s not in self.retired]
+        return [s for s in range(self.n_servers)
+                if s not in self.retired and s not in self.failed]
+
+    # -- fault plane (repro.faults) ---------------------------------------
+    def fail_server(self, server_id: int, now: float = 0.0) -> List[str]:
+        """Crash ``server_id``: every tier it holds vanishes, transfers
+        into it are cancelled (link slots released), and transfers
+        sourcing from it lose their source and enter the retry path.
+        Returns the adapters whose *last* HBM/host copy just died —
+        recoverable from SSD when the store is ``durable_ssd``, lost
+        (loud on next access) otherwise."""
+        if server_id in self.retired:
+            raise RuntimeError(f"crash of retired server {server_id}")
+        if server_id in self.failed:
+            return []
+        self.failed.add(server_id)
+        orphans: List[str] = []
+        for aid in sorted(self.local[server_id]):
+            self.local[server_id].discard(aid)
+            self.index[aid].discard(server_id)
+            if not self.index[aid]:
+                orphans.append(aid)
+        self.host_cache[server_id].clear()
+        cancelled: List[str] = []
+        for key in sorted(self._inflight):
+            dest, aid = key
+            p = self._inflight[key]
+            if dest == server_id:
+                if self.network is not None and p.src_server >= 0:
+                    self.network.end_transfer(p.src_server, p.link_eta)
+                del self._inflight[key]
+                cancelled.append(aid)
+            elif p.src_server == server_id and p.retry_at < 0:
+                self._fail_attempt(p, now)
+        for aid in orphans + cancelled:
+            # an in-flight copy may still land elsewhere; only a truly
+            # copy-less adapter is "lost" (awaiting SSD recovery) — a
+            # cancelled inbound fetch counts when it was the sole copy
+            # in motion for an already-orphaned adapter
+            if not self.index.get(aid) and not self.inflight_count(aid) \
+                    and not any(aid in hc for hc in self.host_cache):
+                self.lost.add(aid)
+        self._debug_check(now)
+        return orphans
+
+    def restore_server(self, server_id: int) -> None:
+        """Bring a crashed server back, empty: it rejoins the fleet as
+        a valid fetch destination; copies re-warm via placement."""
+        self.failed.discard(server_id)
+
+    def stall_transfer(self, dest: int, adapter_id: str,
+                       extra: float = _INF) -> bool:
+        """Fault injection: freeze (or slow by ``extra`` seconds) the
+        in-flight transfer of ``adapter_id`` to ``dest``. The link slot
+        is re-timed to match, so occupancy accounting stays exact; the
+        attempt's deadline is *not* moved, so the retry path fires."""
+        p = self._inflight.get((dest, adapter_id))
+        if p is None or p.retry_at >= 0:
+            return False
+        new_eta = p.eta + extra
+        if self.network is not None and p.src_server >= 0:
+            self.network.move_transfer(p.src_server, p.link_eta, new_eta)
+        p.eta = new_eta
+        p.link_eta = new_eta
+        p.stalled = True
+        return True
+
+    def _fail_attempt(self, p: FetchPlan, now: float) -> None:
+        """One attempt timed out (or its source died): release the link
+        slot, charge the source's breaker, and back off before
+        re-picking a source. Loud past ``retry.max_attempts``."""
+        if self.network is not None and p.src_server >= 0:
+            self.network.end_transfer(p.src_server, p.link_eta)
+            self._breaker(p.src_server).record_failure(now)
+        self.fetch_timeouts += 1
+        p.attempt += 1
+        if p.attempt >= self.retry.max_attempts:
+            raise RuntimeError(
+                f"fetch of {p.adapter_id!r} to server {p.dest} failed "
+                f"{p.attempt} attempts (last source {p.source!r} from "
+                f"server {p.src_server})")
+        p.retry_at = now + self.retry.backoff(p.attempt - 1, self._rng)
+        p.src_server = -1
+        p.source = "retry-wait"
+        p.eta = _INF
+        p.deadline = _INF
+        p.stalled = False
+
+    def _relaunch(self, p: FetchPlan, now: float) -> None:
+        """Backoff elapsed: re-pick the cheapest surviving source and
+        restart the transfer (same plan object — coalesced waiters keep
+        observing it through the in-flight table)."""
+        source, src_server, _ = self._pick_source(p.dest, p.adapter_id,
+                                                  now)
+        if self.network is None:
+            latency, eta = 0.0, now
+        else:
+            latency, eta = self.network.begin_transfer(
+                p.nbytes, source, now=now,
+                src_server=src_server if src_server >= 0 else None)
+        p.source = source
+        p.src_server = src_server
+        p.latency = latency
+        p.eta = eta
+        p.link_eta = eta
+        p.started = now
+        p.deadline = eta + self.retry.timeout
+        p.retry_at = -1.0
+        self.fetch_retries += 1
+        if source == "ssd":
+            self.ssd_fetches += 1
+        elif source == "local_host":
+            self.host_hits += 1
+        if self.tracer is not None:
+            self.tracer.record(
+                "transfer-retry", now, eta, cat="transfer", track="store",
+                attrs={"adapter_id": p.adapter_id, "mode": p.mode,
+                       "source": source, "src_server": src_server,
+                       "dest": p.dest, "attempt": p.attempt})
 
     # -- placement updates (Fig 13; now with optional prefetch) ----------
     def apply_placement(self, placement: Placement, now: float = 0.0,
@@ -272,24 +476,55 @@ class AdapterStore:
             return 0.0
         return self.network.plan_latency(nbytes, source, now, src_server)
 
+    def _breaker(self, peer: int) -> CircuitBreaker:
+        br = self.breakers.get(peer)
+        if br is None:
+            br = CircuitBreaker(self.breaker_threshold,
+                                self.breaker_cooldown)
+            self.breakers[peer] = br
+        return br
+
     def _pick_source(self, dest: int, adapter_id: str, now: float
                      ) -> Tuple[str, int, float]:
         """Cheapest source under current link load: host cache beats an
         idle peer link, a loaded peer link can lose to another peer (or
-        even SSD), replacing the old hardcoded ``min(holders)``."""
+        even SSD), replacing the old hardcoded ``min(holders)``.
+
+        Fault-aware: crashed peers, downed links, and peers whose
+        circuit breaker is open are never quoted. When every peer is
+        excluded by a breaker — or the adapter's last copy died and the
+        SSD tier is durable — the fetch falls back to SSD."""
         nbytes = self.meta[adapter_id].nbytes
         fabric = self.network.fabric if self.network else "ib_gdr"
         cands: List[Tuple[float, int, str, int]] = []
         if adapter_id in self.host_cache[dest]:
             cands.append((self._quote(nbytes, "local_host", now),
                           0, "local_host", -1))
+        excluded = 0
         for p in sorted(self.index[adapter_id] - {dest}):
-            cands.append((self._quote(nbytes, fabric, now, p),
-                          1 + p, fabric, p))
+            if p in self.failed:
+                continue
+            if self.network is not None and not self.network.link_up(p):
+                excluded += 1
+                continue
+            if p in self.breakers and not self.breakers[p].allows(now):
+                excluded += 1
+                continue
+            lat = self._quote(nbytes, fabric, now, p)
+            if math.isinf(lat):
+                excluded += 1
+                continue
+            cands.append((lat, 1 + p, fabric, p))
         if not cands:
-            # the SSD tier is a congestion alternative, never a
-            # correctness backstop: losing every HBM + host copy is an
-            # invariant breach and must stay loud
+            # the SSD tier is a congestion alternative, never a silent
+            # correctness backstop: it serves a copy-less fetch only
+            # when peers exist but are fault-excluded, or when the
+            # store was built durable_ssd (crash recovery); losing the
+            # last copy otherwise stays loud
+            if self.ssd_spill and (excluded or self.durable_ssd):
+                if not self.index[adapter_id]:
+                    self.ssd_recoveries += 1
+                return "ssd", -1, self._quote(nbytes, "ssd", now)
             raise KeyError(f"adapter {adapter_id} lost from cluster")
         if self.ssd_spill:
             cands.append((self._quote(nbytes, "ssd", now),
@@ -310,6 +545,9 @@ class AdapterStore:
         if server_id in self.retired:
             raise RuntimeError(f"fetch of {adapter_id!r} to retired "
                                f"server {server_id}")
+        if server_id in self.failed:
+            raise RuntimeError(f"fetch of {adapter_id!r} to failed "
+                               f"server {server_id}")
         if server_id in self.draining:
             raise RuntimeError(f"fetch of {adapter_id!r} to draining "
                                f"server {server_id}")
@@ -329,7 +567,8 @@ class AdapterStore:
                 src_server=src_server if src_server >= 0 else None)
         plan = FetchPlan(adapter_id, server_id, mode=mode, source=source,
                          src_server=src_server, nbytes=nbytes,
-                         latency=latency, eta=eta)
+                         latency=latency, eta=eta, started=now,
+                         deadline=eta + self.retry.timeout, link_eta=eta)
         self._inflight[key] = plan
         if self.tracer is not None:
             self.tracer.record(
@@ -382,7 +621,10 @@ class AdapterStore:
             self._gc(adapter_id)
             return FetchPlan(adapter_id, server_id, mode="remote-read",
                              hit=True, eta=now)
-        holders = sorted(self.index[adapter_id] - {server_id})
+        holders = sorted(
+            p for p in self.index[adapter_id] - {server_id}
+            if p not in self.failed
+            and (self.network is None or self.network.link_up(p)))
         if not holders:
             return None
         prefs = [p for p in (preferred_peers or []) if p in holders]
@@ -405,17 +647,34 @@ class AdapterStore:
         source link released, host-cache copy superseded."""
         del self._inflight[(plan.dest, plan.adapter_id)]
         if self.network is not None and plan.src_server >= 0:
-            self.network.end_transfer(plan.src_server, plan.eta)
+            self.network.end_transfer(plan.src_server, plan.link_eta)
+        if plan.src_server >= 0 and plan.src_server in self.breakers:
+            self.breakers[plan.src_server].record_success()
         self.local[plan.dest].add(plan.adapter_id)
         self.index[plan.adapter_id].add(plan.dest)
         self.host_cache[plan.dest].pop(plan.adapter_id, None)
+        self.lost.discard(plan.adapter_id)
 
     def poll(self, now: float) -> List[FetchPlan]:
         """Complete transfers whose ETA has passed: install the copy in
         the destination's HBM tier, release the source link, and run the
-        (now unpinned) delete-after-copy GC."""
-        done = [p for p in self._inflight.values()
-                if p.eta <= now + 1e-12]
+        (now unpinned) delete-after-copy GC. The fault path runs here
+        too: transfers past their per-attempt deadline (or whose source
+        died) release the link and back off; transfers whose backoff
+        elapsed relaunch from the cheapest surviving source."""
+        eps = 1e-12
+        done: List[FetchPlan] = []
+        for p in sorted(self._inflight.values(),
+                        key=lambda q: (q.dest, q.adapter_id)):
+            if p.retry_at >= 0.0:
+                if p.retry_at <= now + eps:
+                    self._relaunch(p, now)
+                continue
+            src_dead = p.src_server >= 0 and p.src_server in self.failed
+            if not src_dead and p.eta <= now + eps:
+                done.append(p)
+            elif src_dead or p.deadline <= now + eps:
+                self._fail_attempt(p, now)
         for p in done:
             self._complete(p)
         for p in done:
@@ -432,11 +691,21 @@ class AdapterStore:
             self._gc(plan.adapter_id)
 
     def next_event_time(self, now: float = 0.0) -> Optional[float]:
-        """Earliest future time a transfer can land; overdue (not yet
-        polled) transfers report ``now``."""
+        """Earliest future time a transfer can make progress — landing
+        at its ETA, blowing its deadline, or retrying after backoff.
+        Overdue (not yet polled) transfers report ``now``."""
         if not self._inflight:
             return None
-        return max(min(p.eta for p in self._inflight.values()), now)
+        times = []
+        for p in self._inflight.values():
+            if p.retry_at >= 0.0:
+                times.append(p.retry_at)
+            else:
+                times.append(min(p.eta, p.deadline))
+        t = min(times)
+        if math.isinf(t):
+            return None
+        return max(t, now)
 
     # -- sync compatibility shim ------------------------------------------
     def ensure_local(self, server_id: int, adapter_id: str,

@@ -82,6 +82,13 @@ class RoutingTable:
                                 else (sid, 1.0 / len(kept))
                                 for sid, phi in kept]
 
+    def unblock_server(self, server_id: int) -> None:
+        """Re-admit a previously blocked server (crash -> restore in the
+        fault plane): future placements may route to it again. Existing
+        entries are untouched — the next placement update re-spreads
+        phi."""
+        self.blocked.discard(server_id)
+
     def servers(self, adapter_id: str) -> List[Tuple[int, float]]:
         try:
             return list(self._table[adapter_id])

@@ -124,6 +124,19 @@ def main():
                          "it (plus a controller-decision audit record) "
                          "into DIR on SLO violations, scale-up/drain "
                          "decisions, and timeouts")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="chaos plane: inject a seeded random fault "
+                         "storm (server crashes/restores, link flaps, "
+                         "fetch stalls) over the run; crashes are "
+                         "detected by heartbeat and recovered "
+                         "loss-free")
+    ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                    help="chaos plane: replay an explicit JSON fault "
+                         "schedule (see repro.faults.FaultPlan) "
+                         "instead of a random storm")
+    ap.add_argument("--detector-window", type=float, default=0.5,
+                    help="heartbeat silence (seconds) before a server "
+                         "is confirmed dead and recovery runs")
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--duration", type=float, default=6.0,
@@ -167,11 +180,21 @@ def main():
         tracer = Tracer(clock=WallClock())
         if args.flight_recorder:
             recorder = FlightRecorder(out_dir=args.flight_recorder)
+    fault_plan = None
+    if args.fault_plan:
+        from repro.faults import FaultPlan
+        fault_plan = FaultPlan.load(args.fault_plan)
+    elif args.chaos is not None:
+        from repro.faults import FaultPlan
+        fault_plan = FaultPlan.random_plan(
+            args.chaos, horizon=args.duration, n_servers=args.servers)
     cluster = LoRAServeCluster(
         backend, adapters, policy=args.policy, network=NetworkModel(),
         rebalance_period=args.rebalance_period, seed=args.seed,
         access_mode=args.access_mode, prefetch=args.prefetch,
-        controller=controller, tracer=tracer, flight_recorder=recorder)
+        controller=controller, tracer=tracer, flight_recorder=recorder,
+        fault_plan=fault_plan, detector_window=args.detector_window,
+        durable_ssd=fault_plan is not None)
 
     def _write_trace():
         if tracer is None or not args.trace_out:
@@ -218,6 +241,13 @@ def main():
           f"remote_reads={report.remote_reads} "
           f"prefetches={report.prefetches} "
           f"coalesced_fetches={report.coalesced_fetches}")
+    if fault_plan is not None:
+        print(f"chaos: failures={report.server_failures} "
+              f"recoveries={report.recoveries} "
+              f"redispatched={report.redispatched} "
+              f"fetch_retries={report.fetch_retries} "
+              f"fetch_timeouts={report.fetch_timeouts} "
+              f"breaker_opens={report.breaker_opens}")
     if args.controller:
         print(f"controller: slo_attainment={report.slo_attainment(args.slo_ttft):.3f} "
               f"scale_ups={report.scale_ups} drains={report.drains} "

@@ -44,11 +44,22 @@ from .prom import render_metrics
 DEFAULT_ADAPTER_NBYTES = 64 << 20
 
 
+class _Disconnect:
+    """Sentinel queue event: the client's connection is (to be treated
+    as) gone — injected by chaos plans or detected via EOF."""
+    kind = "disconnect"
+    tokens: tuple = ()
+
+
+_DISCONNECT_EVENT = _Disconnect()
+
+
 class ServeGateway:
     def __init__(self, cluster, host: str = "127.0.0.1", port: int = 0,
                  *, admission: Optional[AdmissionController] = None,
                  poll_interval: float = 0.002,
-                 default_max_tokens: int = 16):
+                 default_max_tokens: int = 16,
+                 submit_retries: int = 3):
         cluster.track_tokens = True   # per-token events feed the SSE path
         self.cluster = cluster
         self.host = host
@@ -56,9 +67,13 @@ class ServeGateway:
         self.admission = admission or AdmissionController()
         self.poll_interval = poll_interval
         self.default_max_tokens = default_max_tokens
+        # degradation under faults: transient routing failures (e.g. a
+        # crash mid-recovery) are retried this many times before a 503
+        self.submit_retries = submit_retries
         self.state = "created"        # serving -> draining -> stopped
         self.codes: Dict[int, int] = {}
         self.streamed_tokens = 0
+        self.disconnects = 0          # client-gone streams cancelled
         self.final_report = None
         self._streams: Dict[int, asyncio.Queue] = {}
         self._req_ids = itertools.count(1)
@@ -109,6 +124,16 @@ class ServeGateway:
                     q = self._streams.get(ev.req.req_id)
                     if q is not None:
                         q.put_nowait(ev)
+                # injector-driven client drops (disconnect_client
+                # faults): sever the matching live SSE stream
+                take = getattr(self.cluster, "take_disconnects", None)
+                for target in (take() if take is not None else ()):
+                    req_id = target if target in self._streams else (
+                        next(iter(self._streams), None))
+                    if req_id is None:
+                        continue
+                    self._streams[req_id].put_nowait(
+                        _DISCONNECT_EVENT)
                 if self.state == "draining" and self.cluster.idle() \
                         and not self._streams:
                     break
@@ -137,7 +162,7 @@ class ServeGateway:
                     break
                 if req is None:
                     break
-                close = await self._route(req, writer)
+                close = await self._route(req, writer, reader)
                 if close or not req.wants_keepalive:
                     break
         except (ConnectionError, asyncio.IncompleteReadError):
@@ -160,7 +185,8 @@ class ServeGateway:
         await writer.drain()
         return close
 
-    async def _route(self, req: http.HttpRequest, writer) -> bool:
+    async def _route(self, req: http.HttpRequest, writer,
+                     reader=None) -> bool:
         """Dispatch one request; returns True when the connection must
         close (SSE streams are close-delimited)."""
         method, path = req.method, req.path
@@ -178,7 +204,8 @@ class ServeGateway:
                 {"state": self.state, "codes": self.codes,
                  "streamed_tokens": self.streamed_tokens,
                  "rejected": self.admission.rejected,
-                 "open_streams": len(self._streams)})
+                 "open_streams": len(self._streams),
+                 "disconnects": self.disconnects})
             return await self._send(
                 writer, 200, text,
                 content_type="text/plain; version=0.0.4; charset=utf-8")
@@ -192,7 +219,7 @@ class ServeGateway:
             return await self._unregister_adapter(
                 path[len("/v1/adapters/"):], writer)
         if path == "/v1/completions" and method == "POST":
-            return await self._completions(req, writer)
+            return await self._completions(req, writer, reader)
         if path in ("/healthz", "/metrics", "/v1/adapters",
                     "/v1/completions"):
             return await self._send(writer, 405,
@@ -258,10 +285,11 @@ class ServeGateway:
             arrival=self.cluster.clock(),
             prompt=list(prompt) if prompt is not None else None)
 
-    async def _completions(self, req, writer) -> bool:
+    async def _completions(self, req, writer, reader=None) -> bool:
         if self.state != "serving":
-            return await self._send(writer, 503,
-                                    {"error": "gateway is draining"})
+            return await self._send(
+                writer, 503, {"error": "gateway is draining"},
+                headers={"Retry-After": "1.000"})
         body = req.json()
         try:
             sreq = self._build_request(body)
@@ -289,10 +317,25 @@ class ServeGateway:
         queue: asyncio.Queue = asyncio.Queue()
         self._streams[sreq.req_id] = queue
         try:
-            try:
-                server = self.cluster.submit(sreq, self.cluster.clock())
-            except UnknownAdapterError as e:
-                return await self._send(writer, 404, {"error": str(e)})
+            server = None
+            for attempt in range(max(1, self.submit_retries)):
+                try:
+                    server = self.cluster.submit(sreq,
+                                                 self.cluster.clock())
+                    break
+                except UnknownAdapterError as e:
+                    return await self._send(writer, 404,
+                                            {"error": str(e)})
+                except RuntimeError:
+                    # transient routing failure (crash mid-recovery):
+                    # let the pump's next poll repair placement, retry
+                    await asyncio.sleep(self.poll_interval)
+            else:
+                return await self._send(
+                    writer, 503,
+                    {"error": "no server available (recovering)"},
+                    headers={"Retry-After":
+                             f"{max(self.poll_interval * 10, 0.05):.3f}"})
             if tracer is not None:
                 # HTTP receive -> routed/submitted on the cluster clock
                 tracer.record("gateway.receive", sreq.arrival,
@@ -302,47 +345,94 @@ class ServeGateway:
                                      "adapter_id": sreq.adapter_id})
             if body.get("stream", True):
                 return await self._stream_response(sreq, server, queue,
-                                                   writer)
+                                                   writer, reader)
             return await self._json_response(sreq, server, queue, writer)
         finally:
             self._streams.pop(sreq.req_id, None)
             self.admission.release(tenant)
 
+    def _client_gone(self, sreq) -> bool:
+        """The client vanished mid-stream: cancel the request so its
+        slot, KV pages and admission token free immediately instead of
+        decoding to a dead socket (the pre-chaos gateway leaked the
+        slot until the request ran to completion)."""
+        self.disconnects += 1
+        self.cluster.cancel_request(sreq.req_id)
+        return True
+
+    async def _next_stream_event(self, queue, eof_task):
+        """Await the next stream event, racing the connection's EOF
+        watcher. Returns ``(event, eof_task)``; the event is the
+        disconnect sentinel when the client went away."""
+        if eof_task is None or eof_task.done():
+            return await queue.get(), eof_task
+        get_task = asyncio.ensure_future(queue.get())
+        await asyncio.wait({get_task, eof_task},
+                           return_when=asyncio.FIRST_COMPLETED)
+        if eof_task.done():
+            try:
+                data = eof_task.result()
+            except (ConnectionError, OSError):
+                data = b""
+            if not data:          # EOF: the client hung up
+                get_task.cancel()
+                return _DISCONNECT_EVENT, None
+            eof_task = None       # stray bytes mid-SSE: stop watching
+        return await get_task, eof_task
+
     async def _stream_response(self, sreq, server: int, queue,
-                               writer) -> bool:
+                               writer, reader=None) -> bool:
         self.codes[200] = self.codes.get(200, 0) + 1
         writer.write(http.sse_headers())
         await writer.drain()
+        # disconnect watcher: an SSE client sends nothing after the
+        # request, so a completed read means EOF (or a dying socket)
+        eof_task = (asyncio.ensure_future(reader.read(1))
+                    if reader is not None else None)
         index = 0
         finished = False
-        while not finished:
-            ev = await queue.get()
-            if ev.kind == "timeout":
-                writer.write(http.sse_event(
-                    {"id": f"cmpl-{sreq.req_id}", "error": "timeout"}))
-                break
-            if ev.tokens:
-                self.streamed_tokens += len(ev.tokens)
-                writer.write(http.sse_event({
-                    "id": f"cmpl-{sreq.req_id}",
-                    "object": "completion.chunk",
-                    "adapter_id": sreq.adapter_id,
-                    "index": index,
-                    "tokens": list(ev.tokens)}))
-                index += len(ev.tokens)
-            if ev.kind == "finish":
-                finished = True
-                writer.write(http.sse_event({
-                    "id": f"cmpl-{sreq.req_id}",
-                    "object": "completion.chunk",
-                    "adapter_id": sreq.adapter_id,
-                    "index": index,
-                    "tokens": [],
-                    "finish_reason": "stop",
-                    "usage": self._usage(sreq, server)}))
-            await writer.drain()
-        writer.write(http.sse_event("[DONE]"))
-        await writer.drain()
+        try:
+            while not finished:
+                ev, eof_task = await self._next_stream_event(queue,
+                                                             eof_task)
+                if ev.kind == "disconnect":
+                    return self._client_gone(sreq)
+                if ev.kind == "timeout":
+                    writer.write(http.sse_event(
+                        {"id": f"cmpl-{sreq.req_id}",
+                         "error": "timeout"}))
+                    break
+                if ev.tokens:
+                    self.streamed_tokens += len(ev.tokens)
+                    writer.write(http.sse_event({
+                        "id": f"cmpl-{sreq.req_id}",
+                        "object": "completion.chunk",
+                        "adapter_id": sreq.adapter_id,
+                        "index": index,
+                        "tokens": list(ev.tokens)}))
+                    index += len(ev.tokens)
+                if ev.kind == "finish":
+                    finished = True
+                    writer.write(http.sse_event({
+                        "id": f"cmpl-{sreq.req_id}",
+                        "object": "completion.chunk",
+                        "adapter_id": sreq.adapter_id,
+                        "index": index,
+                        "tokens": [],
+                        "finish_reason": "stop",
+                        "usage": self._usage(sreq, server)}))
+                try:
+                    await writer.drain()
+                except (ConnectionError, OSError):
+                    return self._client_gone(sreq)
+            writer.write(http.sse_event("[DONE]"))
+            try:
+                await writer.drain()
+            except (ConnectionError, OSError):
+                return self._client_gone(sreq)
+        finally:
+            if eof_task is not None:
+                eof_task.cancel()
         tracer = getattr(self.cluster, "tracer", None)
         if tracer is not None:
             t = self.cluster.clock()

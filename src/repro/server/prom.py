@@ -88,6 +88,9 @@ def render_metrics(report, telemetry: Dict,
     w.metric("repro_gateway_open_streams", "gauge",
              "SSE streams currently open",
              [(None, gateway.get("open_streams", 0))])
+    w.metric("repro_gateway_client_disconnects_total", "counter",
+             "Streams cancelled because the client went away",
+             [(None, gateway.get("disconnects", 0))])
     # -- cluster state ---------------------------------------------------
     w.metric("repro_cluster_pending", "gauge",
              "Requests queued or running across all servers",

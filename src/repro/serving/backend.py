@@ -106,6 +106,32 @@ class ServingBackend(Protocol):
         must have no queued or running work."""
         ...
 
+    def fail_server(self, server_id: int) -> None:
+        """Fail-stop: the server freezes mid-flight — queued and
+        running requests strand (recoverable via ``drain_failed``), and
+        ``step`` never advances it again until restored."""
+        ...
+
+    def drain_failed(self, server_id: int) -> List[ServeRequest]:
+        """Collect every request stranded on a failed server (queued,
+        running, and anything routed to it during the crash-to-detection
+        window) and release its execution resources. The requests are
+        no longer live; the caller re-dispatches their continuations."""
+        ...
+
+    def restore_server(self, server_id: int) -> None:
+        """Bring a failed server back, empty (adapters re-load via the
+        normal placement path)."""
+        ...
+
+    def server_alive(self, server_id: int) -> bool: ...
+
+    def cancel_request(self, req_id: int) -> Optional[ServeRequest]:
+        """Abort a live request wherever it sits (queue or batch slot),
+        freeing its slot/KV pages. Returns the request, or None if it
+        is not live (already finished or unknown)."""
+        ...
+
     def memory_profile(self) -> List[Dict[str, float]]:
         """Per-server {n_adapters, max_rank, adapter_bytes, bank_mode,
         n_remote}."""
@@ -147,6 +173,7 @@ class SimBackend:
         self._completed: List[ServeRequest] = []
         self._timed_out: List[ServeRequest] = []
         self._util_prev: Dict[int, tuple] = {}
+        self.failed: set = set()
         self.tracer = None
 
     def set_tracer(self, tracer) -> None:
@@ -174,8 +201,10 @@ class SimBackend:
         self._inflight.append(req)
 
     def step(self, now: float) -> None:
-        for s in self.servers:
-            for r in list(s.waiting):
+        for sid, s in enumerate(self.servers):
+            if sid in self.failed:
+                continue   # fail-stop: stranded work neither runs
+            for r in list(s.waiting):   # nor times out — it recovers
                 if now - r.arrival > self.timeout:
                     s.waiting.remove(r)
                     self._inflight.remove(r)
@@ -189,8 +218,9 @@ class SimBackend:
         self._inflight = still
 
     def next_event_time(self, now: float) -> Optional[float]:
-        ts = [t for t in (s.next_event_time(now) for s in self.servers)
-              if t is not None]
+        ts = [t for sid, s in enumerate(self.servers)
+              if sid not in self.failed
+              for t in (s.next_event_time(now),) if t is not None]
         return min(ts) if ts else None
 
     def wall_now(self) -> float:
@@ -272,6 +302,42 @@ class SimBackend:
         self._hosted[server_id].clear()
         self._remote[server_id].clear()
 
+    # -- fault plane ----------------------------------------------------
+    def fail_server(self, server_id: int) -> None:
+        self.failed.add(server_id)
+
+    def drain_failed(self, server_id: int) -> List[ServeRequest]:
+        s = self.servers[server_id]
+        stranded = list(s.waiting) + list(s.running)
+        s.waiting.clear()
+        s.running.clear()
+        s.finished.clear()
+        s.busy_until = 0.0
+        gone = {id(r) for r in stranded}
+        self._inflight = [r for r in self._inflight
+                          if id(r) not in gone]
+        self._hosted[server_id].clear()
+        self._remote[server_id].clear()
+        return stranded
+
+    def restore_server(self, server_id: int) -> None:
+        self.failed.discard(server_id)
+        self._util_prev.pop(server_id, None)
+
+    def server_alive(self, server_id: int) -> bool:
+        return server_id not in self.failed
+
+    def cancel_request(self, req_id: int) -> Optional[ServeRequest]:
+        for r in self._inflight:
+            if r.req_id == req_id:
+                s = self.servers[r.server]
+                s.waiting[:] = [q for q in s.waiting if q is not r]
+                s.running[:] = [q for q in s.running if q is not r]
+                self._inflight = [q for q in self._inflight
+                                  if q is not r]
+                return r
+        return None
+
     def memory_profile(self) -> List[Dict[str, float]]:
         out = []
         for sid, hosted in enumerate(self._hosted):
@@ -330,6 +396,7 @@ class EngineBackend:
         self._remote: List[set] = [set() for _ in range(n_servers)]
         self._t0 = time.monotonic()
         self._timed_out: List[ServeRequest] = []
+        self.failed: set = set()
         self.tracer = None
 
     def set_tracer(self, tracer) -> None:
@@ -370,11 +437,11 @@ class EngineBackend:
         eng.submit(req)
 
     def step(self, now: float) -> None:
-        for eng in self.engines:
-            if eng is None:
-                continue
-            # drop queued (not-yet-admitted) requests past the timeout,
-            # mirroring SimBackend's waiting-queue drops
+        for sid, eng in enumerate(self.engines):
+            if eng is None or sid in self.failed:
+                continue   # fail-stop: stranded work freezes until
+            # recovery; drop queued (not-yet-admitted) requests past
+            # the timeout, mirroring SimBackend's waiting-queue drops
             for r in list(eng.queue):
                 if now - r.arrival > self.timeout:
                     eng.queue.remove(r)
@@ -384,8 +451,8 @@ class EngineBackend:
 
     def drain_completed(self) -> List[ServeRequest]:
         out: List[ServeRequest] = []
-        for eng in self.engines:
-            if eng is not None:
+        for sid, eng in enumerate(self.engines):
+            if eng is not None and sid not in self.failed:
                 out.extend(eng.drain_completed())
         return out
 
@@ -493,6 +560,36 @@ class EngineBackend:
                                f"work still queued")
         self.engines[server_id] = None   # frees the bank
         self._remote[server_id].clear()
+
+    # -- fault plane ----------------------------------------------------
+    def fail_server(self, server_id: int) -> None:
+        self.failed.add(server_id)
+
+    def drain_failed(self, server_id: int) -> List[ServeRequest]:
+        eng = self.engines[server_id]
+        if eng is None:
+            return []
+        stranded = list(eng.queue) + [r for r in eng.slots
+                                      if r is not None]
+        # a crashed engine's bank, KV cache, and queue all die with it
+        self.engines[server_id] = None
+        self._remote[server_id].clear()
+        return stranded
+
+    def restore_server(self, server_id: int) -> None:
+        self.failed.discard(server_id)   # engine rebuilds on next load
+
+    def server_alive(self, server_id: int) -> bool:
+        return server_id not in self.failed
+
+    def cancel_request(self, req_id: int) -> Optional[ServeRequest]:
+        for eng in self.engines:
+            if eng is None:
+                continue
+            r = eng.cancel(req_id)
+            if r is not None:
+                return r
+        return None
 
     def memory_profile(self) -> List[Dict[str, float]]:
         from repro.lora.adapter import bank_nbytes

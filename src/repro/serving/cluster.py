@@ -125,6 +125,15 @@ class ClusterReport:
     cost_drift: dict = dataclasses.field(default_factory=dict)
     trace_spans: int = 0
     flight_dumps: int = 0
+    # chaos plane (repro.faults)
+    server_failures: int = 0           # injected crashes
+    recoveries: int = 0                # detected + recovered crashes
+    redispatched: int = 0              # continuation requests issued
+    cancelled: int = 0                 # client-cancelled requests
+    fetch_retries: int = 0             # transfer attempts relaunched
+    fetch_timeouts: int = 0            # attempts that blew their deadline
+    breaker_opens: int = 0             # circuit-breaker open transitions
+    recovery_records: List = dataclasses.field(default_factory=list)
 
     def _eligible(self) -> List[ServeResult]:
         return [r for r in self.results
@@ -187,7 +196,9 @@ class LoRAServeCluster:
                  access_mode: str = "migrate", prefetch: bool = False,
                  controller=None, track_tokens: bool = False,
                  telemetry_window: float = 30.0,
-                 tracer=None, flight_recorder=None):
+                 tracer=None, flight_recorder=None,
+                 fault_plan=None, detector_window: float = 0.5,
+                 durable_ssd: bool = False, retry_policy=None):
         if operating_points is None:
             from repro.cluster.costmodel import (ServerModel,
                                                  profile_operating_points)
@@ -214,7 +225,8 @@ class LoRAServeCluster:
         self.orch = ClusterOrchestrator(
             backend.n_servers, adapters, operating_points, policy=policy,
             network=network, seed=seed, access_mode=access_mode,
-            prefetch=prefetch, sync_store=False)
+            prefetch=prefetch, sync_store=False, retry=retry_policy,
+            durable_ssd=durable_ssd)
         self.metrics = MetricsCollector()
         # always-on live telemetry window (the gateway's /metrics feed);
         # lazy import keeps repro.serving importable without dragging
@@ -242,6 +254,26 @@ class LoRAServeCluster:
         # per-token streaming: watermark of surfaced tokens per request
         self.track_tokens = track_tokens
         self._stream_pos: Dict[int, int] = {}
+        # chaos plane (repro.faults): optional scripted injector, an
+        # always-armed heartbeat detector (beat-then-check per poll, so
+        # false positives are structurally impossible), and
+        # exactly-once continuation bookkeeping for re-dispatch
+        from repro.faults import FailureDetector, FaultInjector
+        self.injector = (FaultInjector(fault_plan)
+                         if fault_plan is not None else None)
+        self.detector = FailureDetector(window=detector_window)
+        self._crashed: Set[int] = set()        # crashed, not yet recovered
+        self._recovered: Set[int] = set()      # recovery ran (still down)
+        self._failed_at: Dict[int, float] = {}
+        self._cont_orig: Dict[int, ServeRequest] = {}   # req_id -> orig
+        self._stream_base: Dict[int, int] = {}  # continuation offset
+        self._pending_events: List[ClusterEvent] = []   # recovery-emitted
+        self.pending_disconnects: List[int] = []   # gateway fault queue
+        self.server_failures = 0
+        self.recoveries = 0
+        self.redispatched = 0
+        self.cancelled = 0
+        self.recovery_records: List = []
         self._ran = False
         self._started = False
         self._closed = False
@@ -386,6 +418,226 @@ class LoRAServeCluster:
                 self.backend.load_adapters(
                     plan.dest, {aid: self.meta[aid].rank})
             self.backend.promote_adapter(plan.dest, aid)
+
+    # -- chaos plane (repro.faults) ---------------------------------------
+    def apply_fault(self, ev, now: float) -> bool:
+        """``FaultInjector`` host hook: apply one due fault event.
+        Returns False for events that don't apply to the current state
+        (chaos schedules are written blind to it)."""
+        from repro.faults import (KIND_CRASH, KIND_DISCONNECT,
+                                  KIND_LINK_DEGRADE, KIND_LINK_DOWN,
+                                  KIND_LINK_UP, KIND_RESTORE,
+                                  KIND_STALL_FETCH)
+        net = self.orch.store.network
+        if ev.kind == KIND_CRASH:
+            return self.inject_crash(ev.target, now)
+        if ev.kind == KIND_RESTORE:
+            return self.inject_restore(ev.target, now)
+        if ev.kind == KIND_LINK_DOWN:
+            if net is None:
+                return False
+            net.set_link_down(ev.target)
+            return True
+        if ev.kind == KIND_LINK_UP:
+            if net is None:
+                return False
+            net.set_link_up(ev.target)
+            return True
+        if ev.kind == KIND_LINK_DEGRADE:
+            if net is None:
+                return False
+            net.degrade_link(ev.target, max(1.0, ev.arg))
+            return True
+        if ev.kind == KIND_STALL_FETCH:
+            return self.inject_stall(ev.target, ev.arg)
+        if ev.kind == KIND_DISCONNECT:
+            # gateway-level fault: queue it for the SSE front end (the
+            # pump drains these and severs the matching live stream)
+            self.pending_disconnects.append(int(ev.target))
+            return True
+        return False
+
+    def inject_crash(self, sid: int, now: Optional[float] = None) -> bool:
+        """Fail-stop server ``sid``: execution freezes, heartbeats stop,
+        and the detector confirms it dead one window later (recovery
+        runs then). No-op for unknown/retired/already-dead servers."""
+        if now is None:
+            now = self._now
+        if (sid < 0 or sid >= self.backend.n_servers
+                or sid in self._retired_at or sid in self._crashed
+                or sid in self._recovered):
+            return False
+        # final beat at the crash instant: the detector's silence window
+        # starts now (covers crashes injected before the first poll)
+        self.detector.beat(sid, now)
+        self.backend.fail_server(sid)
+        self._crashed.add(sid)
+        self._failed_at[sid] = now
+        self.server_failures += 1
+        if self.flight_recorder is not None:
+            self.flight_recorder.dump("fault-crash", now, {"server": sid})
+        return True
+
+    def inject_restore(self, sid: int,
+                       now: Optional[float] = None) -> bool:
+        """Bring a crashed server back. If recovery already ran it
+        rejoins the fleet empty (placement re-warms it); if the crash
+        was never detected (a sub-window flap) the stranded work simply
+        resumes."""
+        if now is None:
+            now = self._now
+        if sid not in self._crashed and sid not in self._recovered:
+            return False
+        self.backend.restore_server(sid)
+        if sid in self._recovered:
+            self._recovered.discard(sid)
+            self.orch.restore_server(sid, now)
+            self._sync_banks(self.orch.placement)
+        self._crashed.discard(sid)
+        self.detector.restore(sid, now)
+        if self.flight_recorder is not None:
+            self.flight_recorder.dump("fault-restore", now,
+                                      {"server": sid})
+        return True
+
+    def inject_stall(self, target: int = -1,
+                     extra: float = 0.0) -> bool:
+        """Freeze (``extra == 0``) or slow one in-flight transfer
+        touching server ``target`` (any transfer when -1)."""
+        store = self.orch.store
+        for (dest, aid), p in sorted(store._inflight.items()):
+            if p.retry_at >= 0:
+                continue
+            if target >= 0 and dest != target and p.src_server != target:
+                continue
+            return store.stall_transfer(
+                dest, aid, extra if extra > 0 else float("inf"))
+        return False
+
+    def _beat_and_check(self, now: float) -> None:
+        """Heartbeat every alive server, then confirm the silent ones —
+        beat-then-check inside one poll means a virtual-clock jump can
+        never outrun a healthy server's beats."""
+        for sid in range(self.backend.n_servers):
+            if sid in self._retired_at:
+                # scale-in, not a crash: silence is expected — stop
+                # watching so the detector never falsely confirms it
+                self.detector.remove(sid)
+                continue
+            if sid in self._recovered:
+                continue
+            if self.backend.server_alive(sid):
+                self.detector.beat(sid, now)
+        for sid in self.detector.check(now):
+            if sid in self.orch.active:
+                self._recover_server(sid, now)
+
+    def _recover_server(self, sid: int, now: float) -> None:
+        """Confirmed-dead recovery: collect the stranded requests, drop
+        the server from placement/routing (orphaned adapters re-warm on
+        survivors), and re-dispatch every stranded request from its
+        last client-visible token."""
+        from repro.faults import RecoveryRecord
+        detected = now
+        stranded = self.backend.drain_failed(sid)
+        plans = self.orch.fail_server(sid, now=now)
+        self._crashed.discard(sid)
+        self._recovered.add(sid)
+        if self.controller is not None and \
+                hasattr(self.controller, "observe_failure"):
+            self.controller.observe_failure(sid, now)
+        redone = 0
+        for req in sorted(stranded, key=lambda r: r.req_id):
+            if self._redispatch(req, now):
+                redone += 1
+        self.recoveries += 1
+        rec = RecoveryRecord(server=sid, detected_at=detected,
+                             recovered_at=now, redispatched=redone,
+                             orphaned_adapters=len(plans))
+        self.recovery_records.append(rec)
+        if self.flight_recorder is not None:
+            self.flight_recorder.dump(
+                "fault-recover", now,
+                {"server": sid, "redispatched": redone,
+                 "stranded": len(stranded),
+                 "recovery_plans": len(plans),
+                 "crashed_at": self._failed_at.get(sid, now)})
+
+    def _redispatch(self, req: ServeRequest, now: float) -> bool:
+        """Exactly-once re-dispatch of one stranded request: surface
+        any host-side tokens the client has not seen yet, then submit a
+        continuation for the remaining budget under the same
+        ``req_id``. Requests that already had every token are finalized
+        directly."""
+        from repro.faults import (delivered_tokens, make_continuation,
+                                  remaining_tokens)
+        if req.req_id in self._cont_orig:
+            # a continuation itself stranded: re-continue the original
+            orig = self._cont_orig.pop(req.req_id)
+            from repro.faults import merge_continuation
+            merge_continuation(orig, req)
+            self._stream_base.pop(req.req_id, None)
+            req = orig
+            req.finish = -1.0
+            req.t_finish = None
+        if self.track_tokens:
+            toks = self._new_tokens(req)
+        else:
+            self._stream_pos[req.req_id] = delivered_tokens(req)
+            toks = ()
+        if toks:
+            self._pending_events.append(
+                ClusterEvent("token", req, toks, now))
+        if remaining_tokens(req) <= 0:
+            # every token was generated; only the completion was lost
+            from repro.core.request import Phase
+            req.finish = now
+            req.t_finish = now
+            req.phase = Phase.DONE
+            self.metrics.record(req)
+            self.hub.observe_completion(req, now)
+            self._finished.append(req)
+            self._stream_pos.pop(req.req_id, None)
+            self._stream_base.pop(req.req_id, None)
+            self._pending_events.append(
+                ClusterEvent("finish", req, (), now))
+            return False
+        cont = make_continuation(req, now)
+        self._cont_orig[req.req_id] = req
+        self._stream_base[req.req_id] = delivered_tokens(req)
+        try:
+            self._dispatch(cont, now)
+        except UnknownAdapterError:
+            # adapter retired mid-crash: surface a timeout, not silence
+            self._cont_orig.pop(req.req_id, None)
+            self._stream_base.pop(req.req_id, None)
+            self._timed_out.append(req)
+            self.hub.observe_timeout(now)
+            self._stream_pos.pop(req.req_id, None)
+            self._pending_events.append(
+                ClusterEvent("timeout", req, (), now))
+            return False
+        self.redispatched += 1
+        return True
+
+    def take_disconnects(self) -> List[int]:
+        """Drain queued ``disconnect_client`` fault targets (consumed
+        by the gateway's pump, which severs the matching stream)."""
+        out, self.pending_disconnects = self.pending_disconnects, []
+        return out
+
+    def cancel_request(self, req_id: int) -> bool:
+        """Abort a live request (client went away): free its backend
+        slot/queue entry and drop its streaming state. Returns True if
+        the request was live."""
+        req = self.backend.cancel_request(req_id)
+        if req is None:
+            return False
+        self.cancelled += 1
+        self._stream_pos.pop(req_id, None)
+        self._stream_base.pop(req_id, None)
+        self._cont_orig.pop(req_id, None)
+        return True
 
     # -- runtime adapter lifecycle ----------------------------------------
     def register_adapter(self, info: AdapterInfo,
@@ -580,11 +832,14 @@ class LoRAServeCluster:
         surface ``None`` placeholders (the sim models counts, not
         values) at the same cadence."""
         pos = self._stream_pos.get(req.req_id, 0)
+        # a continuation's tokens continue the original stream: its
+        # counters restart at zero, so offset by the delivered base
+        base = self._stream_base.get(req.req_id, 0)
         if req.output:
-            cur = len(req.output)
-            toks = tuple(req.output[pos:cur])
+            cur = base + len(req.output)
+            toks = tuple(req.output[pos - base:cur - base])
         else:
-            cur = req.decoded
+            cur = base + req.decoded
             toks = (None,) * max(0, cur - pos)
         if cur > pos:
             self._stream_pos[req.req_id] = cur
@@ -604,6 +859,15 @@ class LoRAServeCluster:
             self._tracer_adv(now)
         events: List[ClusterEvent] = []
         ctrl = self.controller
+        # chaos plane first: due faults land, then heartbeats + the
+        # confirmed-dead check (recovery re-dispatches synchronously and
+        # queues its token/finish events on _pending_events)
+        if self.injector is not None:
+            self.injector.poll(now, self)
+        self._beat_and_check(now)
+        if self._pending_events:
+            events.extend(self._pending_events)
+            self._pending_events = []
         self._poll_store(now)
         if self.orch.policy.dynamic and now + 1e-12 >= self._next_reb:
             self._rebalance(now - self._last_reb, now)
@@ -619,6 +883,14 @@ class LoRAServeCluster:
                 if toks:
                     events.append(ClusterEvent("token", req, toks, now))
         for req in self.backend.drain_completed():
+            orig = self._cont_orig.pop(req.req_id, None)
+            if orig is not None and orig is not req:
+                # a finished continuation reports as its original:
+                # one request, full output, end-to-end timestamps
+                from repro.faults import merge_continuation
+                self._stream_base.pop(req.req_id, None)
+                merge_continuation(orig, req)
+                req = orig
             done_at = req.finish if req.finish >= 0 else now
             self.metrics.record(req)
             self.hub.observe_completion(req, done_at)
@@ -631,6 +903,10 @@ class LoRAServeCluster:
             self._stream_pos.pop(req.req_id, None)
             events.append(ClusterEvent("finish", req, toks, now))
         for req in self.backend.drain_timed_out():
+            orig = self._cont_orig.pop(req.req_id, None)
+            if orig is not None and orig is not req:
+                self._stream_base.pop(req.req_id, None)
+                req = orig
             self._timed_out.append(req)
             self.hub.observe_timeout(now)
             if ctrl is not None:
@@ -669,6 +945,16 @@ class LoRAServeCluster:
                                             or self.backend.pending()
                                             or self.orch.draining):
             cands.append(self._next_ctick)
+        if self.injector is not None:
+            t = self.injector.next_time()
+            if t is not None:
+                cands.append(max(t, now))
+        if self._crashed:
+            # a crashed server's confirmation deadline — virtual clocks
+            # must reach it for detection (and recovery) to fire
+            t = self.detector.next_deadline(now)
+            if t is not None:
+                cands.append(t)
         if not cands:
             return None
         return min(cands)
@@ -830,4 +1116,12 @@ class LoRAServeCluster:
                          if self.tracer is not None else 0),
             flight_dumps=(self.flight_recorder.n_dumps
                           if self.flight_recorder is not None else 0),
+            server_failures=self.server_failures,
+            recoveries=self.recoveries,
+            redispatched=self.redispatched,
+            cancelled=self.cancelled,
+            fetch_retries=store.fetch_retries,
+            fetch_timeouts=store.fetch_timeouts,
+            breaker_opens=sum(b.opens for b in store.breakers.values()),
+            recovery_records=list(self.recovery_records),
         )

@@ -498,6 +498,27 @@ class ServingEngine:
         done, self.completed = self.completed, []
         return done
 
+    def cancel(self, req_id: int) -> Optional[ServeRequest]:
+        """Abort a live request: drop it from the queue, or free its
+        batch slot (and KV pages, and the adapter pin if it was the
+        last co-batched user). Returns the request, or None if it is
+        not live on this engine."""
+        for r in self.queue:
+            if r.req_id == req_id:
+                self.queue = [q for q in self.queue if q is not r]
+                return r
+        for slot, r in enumerate(self.slots):
+            if r is not None and r.req_id == req_id:
+                self.slots[slot] = None
+                if self.page_pool is not None:
+                    self.page_pool.free_kv(f"req{r.req_id}")
+                    if not any(q is not None
+                               and q.adapter_id == r.adapter_id
+                               for q in self.slots):
+                        self.page_pool.pin_adapter(r.adapter_id, False)
+                return r
+        return None
+
     def run_until_drained(self, max_iters: int = 100_000) -> dict:
         it = 0
         while (self.queue or any(s is not None for s in self.slots)) \
